@@ -1,0 +1,122 @@
+"""Paper Fig. 8: training-loss convergence under dense / uniform TopK /
+AdaTopK compression (ratio 100), for an LM (GPT-2 family) and a CV model
+(CNN stand-in for ResNet), trained with the real decentralized runtime
+(OP-Fence schedule + RAD executor) on synthetic-but-learnable data."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import resolve
+from repro.core import (PipelineProgram, network, pipeline_loss_and_grad,
+                        plan_adatopk, plan_none, plan_uniform,
+                        schedule_opfence)
+from repro.data import SyntheticImages, SyntheticLM
+from repro.models.opgraph_models import convnet_opgraph, gpt_opgraph
+from repro.optim import adamw
+
+# The paper uses ratio 100 on GPT2-XL (d=1600: ~16 surviving dims/token).
+# At this benchmark's CPU-scale model (d=128) ratio 100 keeps ~1 dim/token
+# and stalls; ratio 20 matches the paper's per-token survivor count, so the
+# relative comparison (dense vs uniform vs adaptive) is scale-fair.
+RATIO = 20.0
+
+
+def _train(graph, shapes, data_fn, steps, plan, lr=1e-3, seed=0,
+           grad_clip=1.0):
+    """AdamW + global-norm clipping.  Clipping matters: sparsified boundary
+    gradients are heavy-tailed and unclipped runs DIVERGE at this scale
+    (measured — see EXPERIMENTS.md §Convergence)."""
+    from repro.optim import clip_by_global_norm
+
+    params = graph.init(jax.random.PRNGKey(seed), shapes)
+    opt = adamw(lr, weight_decay=0.0)
+    state = opt.init(params)
+    prof = graph.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    sch = schedule_opfence(graph, prof, cluster)
+    prog = PipelineProgram.build(graph, sch.pipeline_subdags(graph))
+
+    @jax.jit
+    def step(params, state, inputs):
+        loss, grads = pipeline_loss_and_grad(prog, params, inputs, plan)
+        grads, _ = clip_by_global_norm(grads, grad_clip)
+        new_params, new_state = opt.update(grads, state, params)
+        return new_params, new_state, loss
+
+    losses = []
+    for i in range(steps):
+        inputs = data_fn(i)
+        params, state, loss = step(params, state, inputs)
+        losses.append(float(loss))
+    return losses
+
+
+def lm_setup(steps_batch=16, seq=64):
+    cfg = resolve("gpt2-xl").smoke.replace(max_seq=seq, vocab=64,
+                                           vocab_pad_to=1)
+    graph = gpt_opgraph(cfg, steps_batch, seq)
+    shapes = {"tokens": (steps_batch, seq), "labels": (steps_batch, seq)}
+    # order-1 Markov: learnable to near the noise floor within ~100 steps
+    ds = SyntheticLM(vocab=cfg.vocab, seq_len=seq, seed=0, order=1)
+
+    def data(i):
+        b = ds.batch(steps_batch, i)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+    return graph, shapes, data
+
+
+def cv_setup(batch=32, hw=16):
+    graph = convnet_opgraph(hw=hw)
+    shapes = {"images": (batch, hw, hw, 3), "labels": (batch,)}
+    ds = SyntheticImages(hw=hw, seed=0, noise=0.4)
+
+    def data(i):
+        b = ds.batch(batch, i)
+        return {"images": jnp.asarray(b["images"]),
+                "labels": jnp.asarray(b["labels"])}
+    return graph, shapes, data
+
+
+def run(csv_writer, steps=80):
+    results: Dict[str, Dict[str, List[float]]] = {}
+    for model_name, setup in [("gpt2", lm_setup), ("convnet", cv_setup)]:
+        graph, shapes, data = setup()
+        prof = graph.annotate(shapes)
+        cluster = network.paper_testbed(1, seed=0)
+        sch = schedule_opfence(graph, prof, cluster)
+        plans = {
+            "dense": plan_none(graph, sch.placement),
+            "uniform_topk": plan_uniform(graph, sch.placement, RATIO),
+            "adatopk": plan_adatopk(graph, prof, cluster, sch.placement,
+                                    RATIO),
+        }
+        results[model_name] = {}
+        for plan_name, plan in plans.items():
+            t0 = time.time()
+            losses = _train(graph, shapes, data, steps, plan)
+            dt = (time.time() - t0) / steps
+            results[model_name][plan_name] = losses
+            tail = float(np.mean(losses[-10:]))
+            csv_writer(f"fig8_convergence_{model_name}_{plan_name}",
+                       dt * 1e6,
+                       f"loss0={losses[0]:.3f},tail={tail:.3f}")
+    # Fig. 8 claims, checked in relative terms: every variant is stable and
+    # descending; dense converges fastest at this scale (the paper's
+    # "little gap" for AdaTopK holds at GPT2-XL widths, not at d=128 —
+    # quantified in EXPERIMENTS.md §Convergence).
+    for model_name in results:
+        r = results[model_name]
+        start = r["dense"][0]
+        for variant, losses in r.items():
+            tail = np.mean(losses[-10:])
+            assert tail < start * 1.02, (model_name, variant, tail, start)
+        assert np.mean(r["dense"][-10:]) <= np.mean(r["uniform_topk"][-10:]) \
+            + 0.05
+    return results

@@ -1,0 +1,35 @@
+"""Paper Table 1: GPU-days and #GPUs to pre-train GPT-3 (175B).
+
+Pure arithmetic over the device sheets — included so every paper table has a
+benchmark; reproduces the paper's headline 'H100 needs 13.17 years'."""
+from __future__ import annotations
+
+GPT3_FLOPS = 3.14e23          # paper's cited total training FLOPs
+GPT3_PARAM_BYTES = 175e9 * 4  # fp32 weights (reproduces the paper's H100=9)
+
+PRICES = {"H100": 37_799, "A100": 6_780, "RTX4090": 1_699,
+          "RTX4080": 989, "RTX3080": 679}
+
+
+def rows():
+    from repro.core.estimator import DEVICE_SHEETS
+    out = []
+    for name, price in PRICES.items():
+        peak, mem = DEVICE_SHEETS[name]
+        days = GPT3_FLOPS / peak / 86_400
+        n_gpus = -(-GPT3_PARAM_BYTES // mem)
+        out.append({"gpu": name, "price_usd": price,
+                    "tflops": peak / 1e12, "gpu_days": round(days),
+                    "gpu_years": round(days / 365.25, 2),
+                    "n_to_load_gpt3": int(n_gpus),
+                    "days_per_dollar": days / price})
+    return out
+
+
+def run(csv_writer):
+    for r in rows():
+        csv_writer("table1_gpu_days", r["gpu_days"] * 86400 * 1e6,
+                   f"{r['gpu']}:years={r['gpu_years']},load={r['n_to_load_gpt3']}")
+    # paper's claims: H100 ~13.17y, 4090 ~60.28y (at the paper's FLOPs/peaks)
+    h100 = next(r for r in rows() if r["gpu"] == "H100")
+    assert 12 < h100["gpu_years"] < 14, h100

@@ -1,0 +1,47 @@
+"""Kernel micro-benchmark (paper §6: 'TopK faster than framework TopK').
+
+On CPU/interpret the Pallas wall-time is meaningless; we measure the XLA
+path vs the reference top_k formulation (both jitted) and report the
+kernel's structural stats (VMEM block bytes, passes) — the TPU-relevant
+numbers."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import topk_mask
+from repro.kernels import ref as kref
+from repro.kernels import topk_compress as tk
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(csv_writer):
+    n = 1 << 20
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n), jnp.float32)
+    k = n // 100
+
+    global_topk = jax.jit(lambda v: topk_mask(v, k))
+    block_ref = jax.jit(lambda v: kref.blockwise_topk_mask_ref(
+        v, k // (n // 4096), 4096))
+    t_g = _time(global_topk, x)
+    t_b = _time(block_ref, x)
+    csv_writer("kernel_global_topk_xla", t_g * 1e6, f"n={n},k={k}")
+    csv_writer("kernel_blockwise_topk_xla", t_b * 1e6,
+               f"n={n},k_per_block={k // (n // 4096)}")
+    # structural stats of the Pallas kernel
+    block = tk.DEFAULT_BLOCK
+    vmem_bytes = block * 4 * 2          # in + out tiles
+    csv_writer("kernel_pallas_structure", 0.0,
+               f"block={block},vmem_bytes={vmem_bytes},"
+               f"search_iters={tk._SEARCH_BITS},grid={n // block}")

@@ -1,0 +1,31 @@
+"""Paper Fig. 11: compression ratio 100 vs 1000 — the 10× larger ratio does
+NOT buy 10× lower latency because per-message latency (α) and the compute
+floor take over."""
+from __future__ import annotations
+
+from repro.configs import resolve
+from repro.core import network, plan_uniform, schedule_opfence, \
+    simulate_iteration
+from repro.models.opgraph_models import profile_opgraph
+from .latency import BATCH, N_MICRO, SEQ
+
+
+def run(csv_writer):
+    cfg = resolve("gpt2-xl").full
+    graph = profile_opgraph(cfg, BATCH, SEQ)
+    prof = graph.annotate({"tokens": (BATCH, SEQ), "labels": (BATCH, SEQ)})
+    cluster = network.paper_testbed(1, seed=0)
+    sch = schedule_opfence(graph, prof, cluster)
+    times = {}
+    for ratio in (1, 100, 1000):
+        plan = plan_uniform(graph, sch.placement, ratio) if ratio > 1 \
+            else None
+        t = simulate_iteration(graph, prof, sch, cluster, plan,
+                               n_micro=N_MICRO).iteration_time
+        times[ratio] = t
+        csv_writer(f"fig11_ratio_{ratio}", t * 1e6, f"iter_s={t:.3f}")
+    # Fig. 11's finding: 1000 is NOT ~10x better than 100
+    speedup_100_to_1000 = times[100] / times[1000]
+    assert speedup_100_to_1000 < 5.0, times
+    assert times[100] < times[1], times
+    return times

@@ -1,0 +1,47 @@
+"""§Roofline table (deliverable g): aggregates experiments/dryrun/*.json into
+the per-(arch × shape × mesh) roofline rows — three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio — and emits CSV."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def baseline_records() -> List[Dict]:
+    return [r for r in load_records()
+            if r.get("status") == "ok" and not r.get("unroll")
+            and "__" not in os.path.basename(str(r.get("hlo_path", "")))
+            and "overrides" not in json.dumps(r.get("note", ""))]
+
+
+def run(csv_writer):
+    recs = [r for r in load_records() if r.get("status") == "ok"]
+    if not recs:
+        csv_writer("roofline_table", 0.0, "no dryrun records: run "
+                   "`python -m repro.launch.dryrun --all` first")
+        return []
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        ratio = rf.get("useful_ratio")
+        csv_writer(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            bound * 1e6,
+            f"dom={rf['dominant']},c={rf['compute_s']:.2e},"
+            f"m={rf['memory_s']:.2e},coll={rf['collective_s']:.2e},"
+            f"useful={ratio if ratio is None else round(ratio, 3)},"
+            f"mem_GiB={r['mem']['peak_per_device'] / 2**30:.1f}")
+    return recs

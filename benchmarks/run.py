@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--steps N]
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def csv_writer(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--steps", type=int, default=80,
+                    help="convergence steps (Fig. 8)")
+    args = ap.parse_args()
+
+    from . import (ablation_microbatch, convergence, gpu_table,
+                   kernel_bench, latency, ratio_sweep, roofline_table,
+                   speedup_table)
+
+    benches = {
+        "table1_gpu": lambda: gpu_table.run(csv_writer),
+        "fig8_convergence": lambda: convergence.run(csv_writer,
+                                                    steps=args.steps),
+        "fig10_latency": lambda: latency.run(csv_writer),
+        "fig11_ratio": lambda: ratio_sweep.run(csv_writer),
+        "speedup_headline": lambda: speedup_table.run(csv_writer),
+        "kernel_topk": lambda: kernel_bench.run(csv_writer),
+        "ablation_nmicro": lambda: ablation_microbatch.run(csv_writer),
+        "roofline": lambda: roofline_table.run(csv_writer),
+    }
+    failed = []
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            csv_writer(f"{name}__wall", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            csv_writer(f"{name}__wall", (time.time() - t0) * 1e6,
+                       f"FAILED:{type(e).__name__}")
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

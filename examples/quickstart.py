@@ -1,0 +1,84 @@
+"""Quickstart: define a model as an OP-DAG, let the broker schedule it onto
+a simulated geo-distributed cluster, and train with AdaTopK compression.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DecentralizedRuntime, network, plan_adatopk,
+                        schedule_opfence)
+from repro.core.opgraph import OpGraph, OpNode, OpType
+
+# --- 1. define a model as an OP-DAG (paper Fig. 7 style) -------------------
+d, vocab, seq, batch = 64, 64, 32, 8
+g = OpGraph("tiny-lm")
+g.add(OpNode("tokens", OpType.PLACEHOLDER))
+g.add(OpNode("labels", OpType.PLACEHOLDER))
+g.add(OpNode("embed", OpType.PARAMETRIC, args=("tokens",),
+             init_fn=lambda r, s: {"t": jax.random.normal(r, (vocab, d)) * .02},
+             apply_fn=lambda p, t: p["t"][t],
+             out_shape_fn=lambda s: (s[0], s[1], d),
+             n_params_fn=lambda s: vocab * d))
+prev = "embed"
+for i in range(4):
+    def mk(i):
+        def init(r, s):
+            k1, k2 = jax.random.split(r)
+            return {"w1": jax.random.normal(k1, (d, 4 * d)) * d ** -0.5,
+                    "w2": jax.random.normal(k2, (4 * d, d)) * (4 * d) ** -0.5}
+
+        def apply(p, x):
+            return x + jnp.tanh(x @ p["w1"]) @ p["w2"]
+        return init, apply
+    init, apply = mk(i)
+    g.add(OpNode(f"block_{i}", OpType.PARAMETRIC, args=(prev,),
+                 init_fn=init, apply_fn=apply, out_shape_fn=lambda s: s,
+                 flops_fn=lambda s: 2 * np.prod(s) * 4 * d * 2,
+                 n_params_fn=lambda s: 8 * d * d))
+    prev = f"block_{i}"
+g.add(OpNode("head", OpType.PARAMETRIC, args=(prev,),
+             init_fn=lambda r, s: {"w": jax.random.normal(r, (d, vocab)) * .02},
+             apply_fn=lambda p, x: x @ p["w"],
+             out_shape_fn=lambda s: (s[0], s[1], vocab),
+             flops_fn=lambda s: 2 * np.prod(s) * vocab,
+             n_params_fn=lambda s: d * vocab))
+
+
+def ce(p, logits, y):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[..., None], -1))
+
+
+g.add(OpNode("loss", OpType.LOSS, args=("head", "labels"), apply_fn=ce,
+             out_shape_fn=lambda a, b: ()))
+
+# --- 2. the broker profiles + schedules onto a geo cluster -----------------
+shapes = {"tokens": (batch, seq), "labels": (batch, seq)}
+profiles = g.annotate(shapes)
+cluster = network.geo_random(n=6, n_sites=2, seed=0)
+schedule = schedule_opfence(g, profiles, cluster)
+print("OP-Fence clusters:", [len(c) for c in schedule.clusters])
+print("stage devices:", schedule.stage_devices())
+
+# --- 3. AdaTopK plan (Eq. 7) + decentralized training ----------------------
+plan = plan_adatopk(g, profiles, cluster, schedule.placement, ratio=10)
+print("per-edge ratios:", {e: round(r, 1) for e, r in plan.edge_ratio.items()})
+runtime = DecentralizedRuntime(g, schedule, plan)
+params = g.init(jax.random.PRNGKey(0), shapes)
+
+rng = np.random.default_rng(0)
+table = rng.integers(0, vocab, size=vocab)
+for step in range(20):
+    toks = np.empty((batch, seq + 1), np.int32)
+    toks[:, 0] = rng.integers(0, vocab, batch)
+    for t in range(1, seq + 1):
+        toks[:, t] = table[toks[:, t - 1]]
+    inputs = {"tokens": jnp.asarray(toks[:, :-1]),
+              "labels": jnp.asarray(toks[:, 1:])}
+    loss, grads = runtime.train_step(params, [inputs])
+    params = jax.tree_util.tree_map(lambda p, gr: p - 0.1 * gr, params, grads)
+    if step % 5 == 0:
+        print(f"step {step:3d}  loss {float(loss):.3f}")
+print(f"traffic: {len(runtime.traffic)} OpData messages exchanged")

@@ -1,0 +1,16 @@
+"""Batched serving demo: prefill a batch of prompts, decode with the KV
+cache, report tokens/s.
+
+    PYTHONPATH=src python examples/serving.py [--arch zamba2-7b]
+"""
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    arch = "llama3-8b"
+    if "--arch" in sys.argv:
+        arch = sys.argv[sys.argv.index("--arch") + 1]
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", arch, "--size", "smoke",
+         "--batch", "4", "--prompt-len", "16", "--gen", "24"]))

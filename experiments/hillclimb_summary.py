@@ -1,0 +1,53 @@
+"""Summarize §Perf hillclimb: baseline vs override records, per pair.
+
+    PYTHONPATH=src python experiments/hillclimb_summary.py
+"""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PAIRS = [("mixtral-8x7b", "train_4k"), ("deepseek-moe-16b", "prefill_32k"),
+         ("llama3-8b", "train_4k")]
+
+
+def load(path):
+    try:
+        return json.load(open(path))
+    except FileNotFoundError:
+        return None
+
+
+def row(r):
+    if not r or r.get("status") != "ok":
+        return None
+    rf = r["roofline"]
+    return {"c": rf["compute_s"], "m": rf["memory_s"],
+            "coll": rf["collective_s"], "dom": rf["dominant"],
+            "mem_GiB": r["mem"]["peak_per_device"] / 2**30}
+
+
+def main():
+    print("| pair | variant | c (s) | m (s) | coll (s) | mem GiB | Δcoll |")
+    print("|---|---|---|---|---|---|---|")
+    for arch, shape in PAIRS:
+        base = row(load(os.path.join(HERE, "dryrun",
+                                     f"{arch}__{shape}__16x16.json")))
+        if not base:
+            continue
+        print(f"| {arch} × {shape} | baseline | {base['c']:.3f} | "
+              f"{base['m']:.3f} | {base['coll']:.3f} | "
+              f"{base['mem_GiB']:.1f} | — |")
+        for ov in ("seqpar", "ep", "ep_seqpar", "moe_w", "moe_ragged",
+                   "seqpar_dots"):
+            r = row(load(os.path.join(
+                HERE, "hillclimb", f"{arch}__{shape}__16x16__{ov}.json")))
+            if not r:
+                continue
+            d = (base["coll"] - r["coll"]) / base["coll"] * 100
+            print(f"| | {ov} | {r['c']:.3f} | {r['m']:.3f} | "
+                  f"{r['coll']:.3f} | {r['mem_GiB']:.1f} | {d:+.1f}% |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON records.
+
+    PYTHONPATH=src python experiments/make_tables.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(dirname):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(HERE, dirname, "*.json"))):
+        r = json.load(open(p))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt(x, nd=2):
+    if x is None:
+        return "—"
+    if isinstance(x, float):
+        if x == 0:
+            return "0"
+        if abs(x) < 1e-3 or abs(x) >= 1e4:
+            return f"{x:.2e}"
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def roofline_table(rolled, unrolled):
+    """Single-pod roofline: exact flops/bytes from unrolled lowers; memory
+    footprint + multi-pod check from rolled."""
+    print("| arch | shape | c (s) | m (s) | coll (s) | dominant | "
+          "MODEL/HLO | mem/dev GiB | 2-pod | exact |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (arch, shape, mesh), r in sorted(rolled.items()):
+        if mesh != "16x16" or r.get("status") != "ok":
+            continue
+        u = unrolled.get((arch, shape, "16x16"), None)
+        exact = u is not None and u.get("status") == "ok"
+        rf = (u if exact else r)["roofline"]
+        mp = rolled.get((arch, shape, "2x16x16"), {})
+        mp_s = "ok" if mp.get("status") == "ok" else mp.get("status", "—")
+        # 'exact' rows come from fully-unrolled lowers (scan bodies counted
+        # per trip); rolled rows undercount c/m by ~n_layers (collective
+        # term is always trip-weighted by the HLO parser).
+        print(f"| {arch} | {shape} | {fmt(rf['compute_s'])} | "
+              f"{fmt(rf['memory_s'])} | {fmt(rf['collective_s'])} | "
+              f"{rf['dominant']} | {fmt(rf['useful_ratio'], 3)} | "
+              f"{r['mem']['peak_per_device'] / 2**30:.1f} | {mp_s} | "
+              f"{'✓' if exact else 'scan'} |")
+
+
+def skipped(rolled):
+    for (arch, shape, mesh), r in sorted(rolled.items()):
+        if r.get("status") == "skipped":
+            print(f"* {arch} × {shape}: {r['note']}")
+
+
+if __name__ == "__main__":
+    rolled = load("dryrun")
+    unrolled = load("dryrun_unroll")
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    if which == "roofline":
+        roofline_table(rolled, unrolled)
+    elif which == "skipped":
+        skipped(rolled)

@@ -1,0 +1,2 @@
+from .hlo import collective_bytes, parse_hlo_computations, while_trip_counts
+from .roofline import RooflineTerms, roofline_terms, HW

@@ -1,0 +1,82 @@
+"""Roofline terms from compiled-artifact statistics (deliverable g).
+
+Hardware constants (TPU v5e, per system assignment):
+    197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+
+    compute term    = HLO_FLOPs / (chips × peak)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` per-device (XLA reports
+the per-partition program) — multiplied by chips to get totals, they cancel
+back out in the terms; we therefore feed *per-device* numbers with chips=1
+semantics and document it.  collective_bytes comes from the HLO text parse
+(repro.analysis.hlo) and is per-device too.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    peak_flops: float = 197e12      # bf16 / chip
+    hbm_bw: float = 819e9           # bytes/s
+    link_bw: float = 50e9           # bytes/s/link ICI
+
+
+HW = HWSpec()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    model_flops: Optional[float] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.flops <= 0:
+            return None
+        return self.model_flops / self.flops
+
+    def as_row(self) -> Dict[str, float]:
+        return {"compute_s": self.compute_s, "memory_s": self.memory_s,
+                "collective_s": self.collective_s, "dominant": self.dominant,
+                "flops": self.flops, "bytes": self.bytes_accessed,
+                "coll_bytes": self.collective_bytes,
+                "model_flops": self.model_flops,
+                "useful_ratio": self.useful_flops_ratio}
+
+
+def roofline_terms(per_device_flops: float, per_device_bytes: float,
+                   per_device_collective_bytes: float,
+                   model_flops_total: Optional[float] = None,
+                   chips: int = 1, hw: HWSpec = HW) -> RooflineTerms:
+    """All inputs per-device (XLA's view of the partitioned program);
+    ``model_flops_total`` is the whole-model 6ND figure and gets divided by
+    ``chips`` for the useful-compute ratio."""
+    return RooflineTerms(
+        compute_s=per_device_flops / hw.peak_flops,
+        memory_s=per_device_bytes / hw.hbm_bw,
+        collective_s=per_device_collective_bytes / hw.link_bw,
+        flops=per_device_flops,
+        bytes_accessed=per_device_bytes,
+        collective_bytes=per_device_collective_bytes,
+        model_flops=(model_flops_total / chips
+                     if model_flops_total is not None else None))

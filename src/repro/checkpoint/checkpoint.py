@@ -1,0 +1,90 @@
+"""Pytree checkpointing: flattened-path .npz + JSON metadata.
+
+No orbax/tensorstore offline; numpy .npz with '/'-joined tree paths is
+portable, append-free, and supports partial (per-CompNode) restore — which
+the decentralized runtime uses so each participant checkpoints only its own
+sub-DAG's parameters (paper §3.3 Update).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name in ("bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            arr = arr.astype(np.float32)   # .npz-portable; cast back on load
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, params: Any,
+                    opt_state: Any = None,
+                    metadata: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v for k, v in _flatten(opt_state).items()})
+    np.savez(path, **payload)
+    meta = dict(metadata or {})
+    meta["step"] = step
+    with open(path.replace(".npz", ".json"), "w") as f:
+        json.dump(meta, f, indent=2, default=str)
+    return path
+
+
+def load_checkpoint(path: str, params_template: Any,
+                    opt_template: Any = None) -> Tuple[Any, Any, Dict]:
+    """Restore into the structure of the provided templates (shape-checked)."""
+    data = np.load(path)
+    meta_path = path.replace(".npz", ".json")
+    meta = json.load(open(meta_path)) if os.path.exists(meta_path) else {}
+
+    def restore(template, prefix):
+        flat_t = _flatten(template)
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        keys = list(flat_t.keys())
+        assert len(keys) == len(leaves)
+        new = []
+        for k, leaf in zip(keys, leaves):
+            arr = data[f"{prefix}/{k}"]
+            if arr.shape != tuple(np.shape(leaf)):
+                raise ValueError(f"ckpt leaf {k}: shape {arr.shape} vs "
+                                 f"template {np.shape(leaf)}")
+            # jnp handles ml_dtypes targets (bf16) that numpy cannot cast to
+            new.append(jnp.asarray(arr).astype(jnp.asarray(leaf).dtype))
+        return jax.tree_util.tree_unflatten(treedef, new)
+
+    params = restore(params_template, "params")
+    opt = restore(opt_template, "opt") if opt_template is not None else None
+    return params, opt, meta
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(directory, f), int(m.group(1))
+    return best

@@ -1,0 +1,201 @@
+"""Workload / hardware estimation (FusionLLM §3.5).
+
+The decentralized computing system is a bidirectional graph of CompNodes with
+heterogeneous GPU memory ``D^p``, compute speed ``S(p)`` and pairwise link
+parameters.  Three models from the paper:
+
+* actual compute speed  S(p) = λ_p · S*(p)   (λ fitted by warm-up profiling)
+* link cost             T_comm^{ij}(M) = α^{ij} + β^{ij} · M
+* per-op time           T(f,p) = R(Pa(f)) + C(f,p) + W(f,p),   Eq. (1)
+  with C(f,p) = FLOPs(f)/S(p); R is a link transfer when f and Pa(f) live on
+  different CompNodes and ~0 otherwise; W (local write) is ignored as in the
+  paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .opgraph import OpGraph, OpProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """One CompNode's hardware sheet (paper Table 1 rows + λ_p)."""
+
+    name: str
+    peak_flops: float          # S*(p), FLOP/s
+    mem_bytes: float           # D^p_gpu
+    lam: float = 1.0           # λ_p scaling-down factor (warm-up profiled)
+
+    @property
+    def speed(self) -> float:  # S(p)
+        return self.lam * self.peak_flops
+
+
+# Representative consumer/datacenter sheets (paper Table 1, fp16 tensor FLOPS).
+DEVICE_SHEETS: Dict[str, Tuple[float, float]] = {
+    "H100":     (756e12, 80e9),
+    "A100":     (311.84e12, 80e9),
+    "RTX4090":  (165.16e12, 24e9),
+    "RTX4080":  (97.5e12, 16e9),
+    "RTX3080":  (59.5e12, 10e9),
+    "RTX2080":  (40.0e12, 8e9),
+    "TPUv5e":   (197e12, 16e9),
+}
+
+
+def make_device(name: str, sheet: str, lam: float = 1.0) -> DeviceSpec:
+    peak, mem = DEVICE_SHEETS[sheet]
+    return DeviceSpec(name=name, peak_flops=peak, mem_bytes=mem, lam=lam)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """α–β model for one directed link."""
+
+    alpha: float               # latency, seconds
+    beta: float                # seconds per byte (1/bandwidth)
+
+    def time(self, nbytes: float) -> float:
+        return self.alpha + self.beta * float(nbytes)
+
+    @property
+    def bandwidth(self) -> float:
+        return 1.0 / self.beta if self.beta > 0 else float("inf")
+
+
+LOCAL_LINK = LinkSpec(alpha=0.0, beta=0.0)
+
+
+class ClusterSpec:
+    """CompNode group P = <{p_i}, {p_i,p_j}> with pairwise α–β links."""
+
+    def __init__(self, devices: Sequence[DeviceSpec],
+                 links: Mapping[Tuple[int, int], LinkSpec]):
+        self.devices = list(devices)
+        self._links = dict(links)
+        n = len(self.devices)
+        for (i, j) in self._links:
+            if not (0 <= i < n and 0 <= j < n):
+                raise ValueError(f"link ({i},{j}) out of range for {n} devices")
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def link(self, i: int, j: int) -> LinkSpec:
+        if i == j:
+            return LOCAL_LINK
+        if (i, j) in self._links:
+            return self._links[(i, j)]
+        if (j, i) in self._links:
+            return self._links[(j, i)]
+        raise KeyError(f"no link between CompNodes {i} and {j}")
+
+    def comm_time(self, i: int, j: int, nbytes: float) -> float:
+        return self.link(i, j).time(nbytes)
+
+    def bandwidth_matrix(self) -> np.ndarray:
+        n = len(self.devices)
+        bw = np.zeros((n, n))
+        for i in range(n):
+            for j in range(n):
+                if i != j:
+                    bw[i, j] = self.link(i, j).bandwidth
+        return bw
+
+    def compute_time(self, flops: float, p: int) -> float:
+        """C(f,p) = FLOPs(f) / S(p)."""
+        return flops / self.devices[p].speed
+
+
+def fit_lambda(measured_flops_per_s: float, peak_flops: float) -> float:
+    """Regression-based scaling-down factor λ_p = S(p)/S*(p) (paper cites
+    Paleo).  With a single warm-up measurement this is a ratio; with several,
+    the least-squares slope of achieved-vs-peak."""
+    return float(measured_flops_per_s) / float(peak_flops)
+
+
+def fit_lambda_regression(flops: Sequence[float], seconds: Sequence[float],
+                          peak_flops: float) -> float:
+    """λ from multiple warm-up profiles: least-squares slope through origin of
+    time = FLOPs / (λ·S*)."""
+    f = np.asarray(flops, dtype=np.float64)
+    t = np.asarray(seconds, dtype=np.float64)
+    # time = f / (lam*peak)  =>  lam = sum(f^2) / (peak * sum(f*t))  (LS)
+    denom = peak_flops * float(np.dot(f, t))
+    if denom <= 0:
+        raise ValueError("degenerate warm-up profile")
+    return float(np.dot(f, f)) / denom
+
+
+def fit_alpha_beta(sizes: Sequence[float], seconds: Sequence[float]) -> LinkSpec:
+    """Least-squares α–β fit from ping-pong style measurements."""
+    M = np.stack([np.ones(len(sizes)), np.asarray(sizes, dtype=np.float64)], axis=1)
+    sol, *_ = np.linalg.lstsq(M, np.asarray(seconds, dtype=np.float64), rcond=None)
+    alpha, beta = float(max(sol[0], 0.0)), float(max(sol[1], 0.0))
+    return LinkSpec(alpha=alpha, beta=beta)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCost:
+    """Estimated cost of one op on its assigned CompNode (Eq. 1 terms)."""
+
+    name: str
+    comp_time: float       # C(f,p)
+    recv_time: float       # R(Pa(f)) — only cross-CompNode parents
+    recv_bytes: int
+    send_bytes: int
+
+    @property
+    def total(self) -> float:
+        return self.comp_time + self.recv_time
+
+
+def estimate_op_costs(graph: OpGraph,
+                      profiles: Mapping[str, OpProfile],
+                      cluster: ClusterSpec,
+                      placement: Mapping[str, int],
+                      compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
+                      index_overhead: float = 3.0,
+                      backward: bool = False) -> Dict[str, OpCost]:
+    """Per-op Eq.(1) costs under a placement {op -> CompNode index}.
+
+    ``compress_ratio`` maps a cross-node edge (producer, consumer) to the
+    Top-K ratio r on that edge; the transported payload shrinks to
+    ``index_overhead / r`` of the original (values + indexes, paper Eq. 7's
+    coefficient 3 for float32 values + int64 indexes).
+    """
+    compress_ratio = compress_ratio or {}
+    costs: Dict[str, OpCost] = {}
+    for n, node in graph.nodes.items():
+        p = placement[n]
+        prof = profiles[n]
+        flops = prof.bwd_flops if backward else prof.fwd_flops
+        comp = cluster.compute_time(flops, p)
+        recv = 0.0
+        recv_bytes = 0
+        for a in node.args:
+            q = placement[a]
+            if q == p:
+                continue
+            nbytes = profiles[a].out_bytes
+            r = compress_ratio.get((a, n), 1.0)
+            if r > 1.0:
+                nbytes = nbytes * index_overhead / r
+            recv += cluster.comm_time(q, p, nbytes)
+            recv_bytes += int(nbytes)
+        send_bytes = 0
+        users = graph.users[n]
+        for u in users:
+            if placement[u] != p:
+                nbytes = prof.out_bytes
+                r = compress_ratio.get((n, u), 1.0)
+                if r > 1.0:
+                    nbytes = nbytes * index_overhead / r
+                send_bytes += int(nbytes)
+        costs[n] = OpCost(name=n, comp_time=comp, recv_time=recv,
+                          recv_bytes=recv_bytes, send_bytes=send_bytes)
+    return costs

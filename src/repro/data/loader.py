@@ -1,0 +1,32 @@
+"""Shard-aware device feeding.
+
+Host-side numpy batches -> device arrays laid out per the step's
+in_shardings.  On a multi-host pod each host would feed its addressable
+shard (``jax.make_array_from_process_local_data``); in this single-process
+container that path degenerates to ``jax.device_put`` with the target
+sharding, which is exactly what we do.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Iterator, Mapping, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    def __init__(self, batch_iter: Iterator[Dict[str, np.ndarray]],
+                 shardings: Optional[Mapping[str, Any]] = None):
+        self._it = batch_iter
+        self._shardings = shardings or {}
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Dict[str, jax.Array]:
+        host = next(self._it)
+        out = {}
+        for k, v in host.items():
+            sh = self._shardings.get(k)
+            out[k] = jax.device_put(v, sh) if sh is not None else jax.device_put(v)
+        return out

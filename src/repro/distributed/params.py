@@ -1,0 +1,122 @@
+"""Parameter / optimizer-state sharding rules.
+
+Generic 2D rule (FSDP × TP, MaxText-style "fsdp+tensor"):
+* last dim  -> ``model`` axis when divisible (output features / experts' ff)
+* 2nd-last  -> ``data``  axis when divisible (input features; ZeRO-3-like)
+* everything else replicated; the ``pod`` axis never shards weights
+  (DP across pods — the paper's geo-hierarchy maps compression, not weight
+  sharding, onto the slow axis).
+
+Per-path overrides let the hillclimb change individual tensors without
+touching model code.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def generic_spec(shape: Tuple[int, ...], mesh: Mesh,
+                 model_axis: str = "model", data_axis: str = "data") -> P:
+    msz = _axis_size(mesh, model_axis)
+    dsz = _axis_size(mesh, data_axis)
+    spec = [None] * len(shape)
+    if len(shape) >= 1 and msz > 1 and shape[-1] % msz == 0 \
+            and shape[-1] >= msz:
+        spec[-1] = model_axis
+    if len(shape) >= 2 and dsz > 1 and shape[-2] % dsz == 0 \
+            and shape[-2] >= dsz:
+        spec[-2] = data_axis
+    return P(*spec)
+
+
+def tree_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def row_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Row-parallel (Megatron): contraction dim (−2) on ``model`` so the
+    matmul psums activation partials instead of all-gathering the full
+    activation; output features (−1) FSDP-shard on ``data``.
+
+    Without this, a column-parallel down-projection forces GSPMD to gather
+    the f-sharded MLP hidden — measured 3.5 GiB of all-gather per llama3
+    layer per train step."""
+    msz = _axis_size(mesh, "model")
+    dsz = _axis_size(mesh, "data")
+    spec = [None] * len(shape)
+    if len(shape) >= 2 and msz > 1 and shape[-2] % msz == 0 \
+            and shape[-2] >= msz:
+        spec[-2] = "model"
+    if len(shape) >= 1 and dsz > 1 and shape[-1] % dsz == 0 \
+            and shape[-1] >= dsz:
+        spec[-1] = "data"
+    return P(*spec)
+
+
+# Projections whose *input* features carry the model-sharded activation:
+# attention output, MLP down, Mamba out, mLSTM down, sLSTM FFN down, MoE down.
+ROW_PARALLEL_PATTERNS = (
+    r".*/(?:wo|out_proj|ffn_down|down)/w",
+    r".*/moe/down",
+    r".*/shared/down/w",
+)
+
+
+def param_shardings(tree: Any, mesh: Mesh,
+                    overrides: Optional[Dict[str, P]] = None,
+                    rule: Callable = generic_spec) -> Any:
+    """ShapeDtypeStruct/array pytree -> NamedSharding pytree.
+
+    ``overrides``: regex (fullmatch on '/'-joined path) -> PartitionSpec,
+    applied before the row-parallel defaults and the generic rule.
+    """
+    overrides = overrides or {}
+    compiled = [(re.compile(k), v) for k, v in overrides.items()]
+    rows = [re.compile(p) for p in ROW_PARALLEL_PATTERNS]
+
+    def assign(path, leaf):
+        pstr = tree_path_str(path)
+        for rx, spec in compiled:
+            if rx.fullmatch(pstr):
+                return NamedSharding(mesh, spec)
+        for rx in rows:
+            if rx.fullmatch(pstr):
+                return NamedSharding(mesh, row_spec(np.shape(leaf), mesh))
+        return NamedSharding(mesh, rule(np.shape(leaf), mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, tree)
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+def batch_spec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch over ('pod','data') when divisible, else 'data',
+    else replicate (long_500k has batch=1)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and global_batch % size == 0 and global_batch >= size:
+        return P(tuple(axes))
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0 \
+            and global_batch >= mesh.shape["data"]:
+        return P("data")
+    return P(None)

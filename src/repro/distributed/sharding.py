@@ -1,0 +1,88 @@
+"""Sharding helpers: logical-axis annotations that no-op off-mesh.
+
+Model code annotates activations with *logical* axes (``"batch"``,
+``"model"``, ``"seq"``); the launcher binds them to physical mesh axes via
+:func:`use_mesh`.  Off-mesh (unit tests, smoke tests on one CPU device) the
+annotations vanish, so model code is identical in both worlds.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# logical name -> physical mesh axis (or tuple of axes)
+DEFAULT_RULES: Dict[str, Union[str, Tuple[str, ...], None]] = {
+    "batch": ("pod", "data"),
+    "model": "model",
+    "seq": None,
+    "kvseq": "model",      # decode KV caches shard sequence over model axis
+    "expert": "model",
+    "vocab": "model",
+    "ff": "model",
+    "heads": "model",
+    # --- perf-iteration levers (OFF in the baseline; §Perf flips them) ---
+    "act_seq": None,       # Megatron sequence parallelism: residual-stream
+                           # activations sharded over 'model' between blocks
+    "expert_dispatch": None,  # expert-parallel (E,C,d) dispatch buffers
+}
+
+
+def _current() -> Tuple[Optional[Mesh], Dict[str, Union[str, Tuple[str, ...], None]]]:
+    return (getattr(_state, "mesh", None),
+            getattr(_state, "rules", DEFAULT_RULES))
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict[str, Union[str, Tuple[str, ...], None]]] = None):
+    """Activate a mesh + logical-axis rules for model-internal constraints."""
+    prev = (getattr(_state, "mesh", None), getattr(_state, "rules", DEFAULT_RULES))
+    _state.mesh = mesh
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    # drop axes the mesh does not have (e.g. "pod" on the single-pod mesh)
+    def _filter(v):
+        if v is None:
+            return None
+        axes = (v,) if isinstance(v, str) else tuple(v)
+        kept = tuple(a for a in axes if a in mesh.axis_names)
+        if not kept:
+            return None
+        return kept[0] if len(kept) == 1 else kept
+    _state.rules = {k: _filter(v) for k, v in merged.items()}
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes: Sequence[Optional[str]]) -> P:
+    _, rules = _current()
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def constrain(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint by logical axes; identity off-mesh, on a
+    1-device mesh, or when every logical axis resolves to None (an all-None
+    spec would PIN replication — perf levers like 'expert_dispatch' must be
+    true no-ops while off)."""
+    mesh, _ = _current()
+    if mesh is None or mesh.size == 1:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs axes {axes}")
+    spec = logical_to_spec(axes)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *axes: Optional[str]) -> NamedSharding:
+    with use_mesh(mesh):
+        return NamedSharding(mesh, logical_to_spec(axes))

@@ -1,0 +1,243 @@
+"""Step builders + abstract input specs for every (arch × input-shape).
+
+This is the GSPMD execution path (DESIGN.md §4 path 1): one ``jax.jit`` per
+step with explicit in/out shardings over the production mesh.  The same
+builders drive the multi-pod dry-run (ShapeDtypeStruct lowering — deliverable
+e), real CPU-scale training (launch/train.py), and serving (launch/serve.py).
+
+Step kinds per input shape:
+* train_4k    -> ``train_step(params, opt_state, batch)``
+* prefill_32k -> ``prefill_step(params, batch)``
+* decode_32k / long_500k -> ``serve_step(params, cache, tokens)`` — ONE new
+  token against a seq_len-deep cache (cache donated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelCfg
+from repro.models import causal_lm, encdec
+from repro.optim import Optimizer, clip_by_global_norm
+from .params import batch_spec, generic_spec, param_shardings, tree_path_str
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ============================================================ input specs ==
+def src_len_for(cfg: ModelCfg, seq_len: int) -> int:
+    """Audio source frames for enc-dec shapes (8 tokens/frame heuristic)."""
+    return max(seq_len // 8, 16)
+
+
+def input_specs(cfg: ModelCfg, shape: InputShape) -> Dict[str, SDS]:
+    """Abstract batch for train/prefill shapes (decode builds caches too —
+    see :func:`decode_state_specs`)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.family == "encdec":
+        spec = {"src_embeds": SDS((B, src_len_for(cfg, S), cfg.d_frontend),
+                                  cfg.dtype),
+                "tokens": SDS((B, S), i32)}
+        if shape.kind == "train":
+            spec["labels"] = SDS((B, S), i32)
+        return spec
+    S_text = S - cfg.n_prefix if cfg.n_prefix else S
+    spec = {"tokens": SDS((B, S_text), i32)}
+    if shape.kind == "train":
+        spec["labels"] = SDS((B, S_text), i32)
+    if cfg.n_prefix:
+        spec["prefix_embeds"] = SDS((B, cfg.n_prefix, cfg.d_frontend),
+                                    cfg.dtype)
+    return spec
+
+
+def decode_window(cfg: ModelCfg, shape: InputShape) -> Optional[int]:
+    if shape.name == "long_500k":
+        return cfg.long_window or cfg.window
+    return cfg.window
+
+
+def decode_state_specs(cfg: ModelCfg, shape: InputShape) -> Any:
+    """Abstract decode cache for serve_step lowering."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            lambda: encdec.cache_init(cfg, B, S, src_len_for(cfg, S)))
+    return jax.eval_shape(lambda: causal_lm.cache_init(cfg, B, S))
+
+
+# ======================================================== cache shardings ==
+def cache_shardings(cache_shapes: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Path-aware sharding for decode caches.
+
+    KV caches shard batch + sequence-over-model ("kvseq"); SSM/xLSTM states
+    shard batch + the widest feature dim over model.  Anything indivisible
+    replicates — correctness never depends on these choices.
+    """
+    bspec = batch_spec(global_batch, mesh)
+    baxes = bspec[0] if len(bspec) and bspec[0] is not None else None
+    msz = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def shard_dim(spec, shape, idx, axis, size):
+        if size > 1 and shape[idx] % size == 0 and shape[idx] >= size:
+            spec[idx] = axis
+
+    def rule(path, leaf):
+        pstr = tree_path_str(path)
+        name = pstr.rsplit("/", 1)[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        in_slstm = "/s/" in pstr or pstr.endswith("/s")
+
+        def setb(idx):
+            if baxes is not None and nd >= -idx and shape[idx] == global_batch:
+                spec[idx] = baxes
+
+        if name == "pos" or nd == 0:
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "xk", "xv"):
+            # NOT the sequence dim: decode writes it via dynamic_update_slice
+            # at a traced position, which GSPMD can only partition by fully
+            # rematerializing the cache (measured: 2 GiB of all-gather per
+            # layer per step).  head_dim shards cleanly: the only cost is an
+            # all-reduce of the (B,H,1,S) scores over the contraction.
+            setb(-4)
+            shard_dim(spec, shape, -1, "model", msz)      # head_dim
+        elif name == "h" and not in_slstm:                # mamba state
+            setb(-4)
+            shard_dim(spec, shape, -3, "model", msz)      # ssm heads
+        elif name == "conv":
+            setb(-3)
+            shard_dim(spec, shape, -1, "model", msz)      # channels
+        elif name == "C":                                  # mLSTM matrix mem
+            setb(-4)
+            shard_dim(spec, shape, -1, "model", msz)
+        elif name in ("n", "c", "h", "m"):                 # vector states
+            setb(-3)
+            shard_dim(spec, shape, -1, "model", msz)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def batch_shardings(batch_shapes: Dict[str, SDS], mesh: Mesh,
+                    global_batch: int) -> Dict[str, Any]:
+    bspec = batch_spec(global_batch, mesh)
+
+    def rule(_, leaf):
+        spec = list(bspec) + [None] * (len(leaf.shape) - len(bspec))
+        return NamedSharding(mesh, P(*spec[:len(leaf.shape)]))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+# ================================================================== steps ==
+def make_train_step(cfg: ModelCfg, optimizer: Optimizer,
+                    grad_clip: float = 1.0) -> Callable:
+    loss_mod = encdec if cfg.family == "encdec" else causal_lm
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return loss_mod.train_loss(cfg, p, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        if grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        out_metrics.update(metrics)
+        return params, opt_state, out_metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelCfg, cache_len: int,
+                      window: Optional[int] = None) -> Callable:
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            return encdec.prefill(cfg, params, batch["src_embeds"],
+                                  batch["tokens"], cache_len)
+    else:
+        def prefill_step(params, batch):
+            return causal_lm.prefill(cfg, params, batch["tokens"],
+                                     cache_len=cache_len,
+                                     prefix_embeds=batch.get("prefix_embeds"),
+                                     window=window)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelCfg, window: Optional[int] = None) -> Callable:
+    if cfg.family == "encdec":
+        def serve_step(params, cache, tokens):
+            return encdec.decode_step(cfg, params, cache, tokens)
+    else:
+        def serve_step(params, cache, tokens):
+            return causal_lm.decode_step(cfg, params, cache, tokens,
+                                         window=window)
+    return serve_step
+
+
+# ============================================================== assembler ==
+def abstract_params(cfg: ModelCfg) -> Any:
+    mod = encdec if cfg.family == "encdec" else causal_lm
+    return jax.eval_shape(functools.partial(mod.init, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def build_jitted(cfg: ModelCfg, mesh: Mesh, shape: InputShape,
+                 optimizer: Optional[Optimizer] = None,
+                 param_overrides: Optional[Dict[str, P]] = None,
+                 remat: bool = False):
+    """Assemble the jitted step + abstract example args for one
+    (arch × input-shape × mesh).  Returns (jit_fn, args, meta)."""
+    from repro.optim import adafactor
+    optimizer = optimizer or adafactor(1e-3)
+    p_abs = abstract_params(cfg)
+    p_sh = param_shardings(p_abs, mesh, overrides=param_overrides)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, optimizer)
+        if remat:
+            # remat the whole loss; scan-over-layers already bounds liveness,
+            # this additionally frees intra-block activations
+            step = make_train_step(cfg, optimizer)  # remat handled in model
+        opt_abs = jax.eval_shape(optimizer.init, p_abs)
+        opt_sh = jax.tree_util.tree_map(
+            lambda l: NamedSharding(mesh, generic_spec(np.shape(l), mesh)),
+            opt_abs)
+        batch_abs = input_specs(cfg, shape)
+        b_sh = batch_shardings(batch_abs, mesh, shape.global_batch)
+        fn = jax.jit(step, in_shardings=(p_sh, opt_sh, b_sh),
+                     out_shardings=(p_sh, opt_sh, None),
+                     donate_argnums=(0, 1))
+        return fn, (p_abs, opt_abs, batch_abs), {"param_sh": p_sh}
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, cache_len=shape.seq_len,
+                                 window=cfg.window)
+        batch_abs = input_specs(cfg, shape)
+        b_sh = batch_shardings(batch_abs, mesh, shape.global_batch)
+        cache_abs = decode_state_specs(cfg, shape)
+        c_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh))
+        return fn, (p_abs, batch_abs), {"param_sh": p_sh}
+
+    # decode
+    step = make_decode_step(cfg, window=decode_window(cfg, shape))
+    cache_abs = decode_state_specs(cfg, shape)
+    c_sh = cache_shardings(cache_abs, mesh, shape.global_batch)
+    tok_abs = SDS((shape.global_batch, 1), jnp.int32)
+    t_sh = batch_shardings({"t": tok_abs}, mesh, shape.global_batch)["t"]
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return fn, (p_abs, cache_abs, tok_abs), {"param_sh": p_sh}

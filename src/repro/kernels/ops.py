@@ -1,0 +1,40 @@
+"""Jitted public wrappers over the Pallas Top-K kernels.
+
+``topk_mask(x, k)`` matches :func:`repro.core.compression.topk_mask`'s
+global-k signature by converting the global k into a per-block k (ceil
+split).  Global and blockwise selections differ (documented: blockwise is
+the standard approximation real compression kernels ship — it bounds the
+worst-case block and parallelizes perfectly); convergence benchmarks compare
+both (benchmarks/convergence.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topk_compress as tk
+
+INTERPRET = True  # CPU container; flip to False on real TPU
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def blockwise_topk_mask(x: jax.Array, k_per_block: int,
+                        block: int = tk.DEFAULT_BLOCK) -> jax.Array:
+    return tk.blockwise_topk_mask(x, k_per_block, block, interpret=INTERPRET)
+
+
+def topk_mask(x: jax.Array, k: int, block: int = tk.DEFAULT_BLOCK) -> jax.Array:
+    """Global-k API -> per-block k (keeps ~k total, exact per block)."""
+    n = int(np.prod(x.shape))
+    nb = -(-n // block)
+    k_per_block = max(1, -(-int(k) // nb))
+    return blockwise_topk_mask(x, k_per_block, block)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def ef_topk(x: jax.Array, residual: jax.Array, k_per_block: int,
+            block: int = tk.DEFAULT_BLOCK):
+    return tk.ef_topk(x, residual, k_per_block, block, interpret=INTERPRET)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Top-K compression kernels.
+
+Selection semantics (shared by oracle and kernel, so comparisons are exact):
+keep every element whose |value| is >= the k-th largest |value| in its block.
+With ties at the threshold this keeps a *superset* of k elements — the same
+superset in both implementations, because the kernel's binary search over
+IEEE-754 bit patterns recovers exactly the k-th largest magnitude.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def topk_mask_ref(x: jax.Array, k: int) -> jax.Array:
+    """Global Top-K by magnitude, dense output (threshold semantics)."""
+    flat = x.reshape(-1)
+    k = int(min(max(k, 1), flat.shape[0]))
+    vals, _ = jax.lax.top_k(jnp.abs(flat).astype(jnp.float32), k)
+    thr = vals[-1]
+    keep = jnp.abs(flat).astype(jnp.float32) >= thr
+    return jnp.where(keep, flat, 0).reshape(x.shape)
+
+
+def _pad_to_blocks(flat: jax.Array, block: int) -> Tuple[jax.Array, int]:
+    n = flat.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    return jnp.pad(flat, (0, pad)), nb
+
+
+def blockwise_topk_mask_ref(x: jax.Array, k_per_block: int,
+                            block: int = 4096) -> jax.Array:
+    """Blockwise Top-K (what the TPU kernel computes): the flat tensor is
+    split into ``block``-sized tiles, each keeping its own top k_per_block.
+    Zero padding never wins selection (|0| below any positive threshold)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    padded, nb = _pad_to_blocks(flat, block)
+    tiles = padded.reshape(nb, block)
+    k = int(min(max(k_per_block, 1), block))
+    mags = jnp.abs(tiles).astype(jnp.float32)
+    vals, _ = jax.lax.top_k(mags, k)
+    thr = vals[:, -1:]
+    out = jnp.where(mags >= thr, tiles, 0)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def ef_topk_ref(x: jax.Array, residual: jax.Array, k_per_block: int,
+                block: int = 4096) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback variant: compress (x + residual), return
+    (sent, new_residual)."""
+    corrected = x + residual
+    sent = blockwise_topk_mask_ref(corrected, k_per_block, block)
+    return sent, corrected - sent
+
+
+def count_kept(x: jax.Array) -> int:
+    return int(jnp.sum(x != 0))

@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape) the step is lowered and compiled on
+the production mesh — 16×16 single pod AND 2×16×16 multi-pod — with
+ShapeDtypeStruct inputs (no allocation).  ``memory_analysis()`` proves the
+per-device footprint; ``cost_analysis()`` + the HLO collective parse feed
+§Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+
+The two os.environ lines above MUST stay before any other import: jax locks
+the device count at first initialization.
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            out_dir: Optional[str] = None, save_hlo: bool = False,
+            unroll: bool = False, overrides_name: Optional[str] = None,
+            dtype: str = "bfloat16") -> dict:
+    from repro.analysis.hlo import collective_bytes, collective_breakdown
+    from repro.analysis.model_flops import model_flops
+    from repro.analysis.roofline import roofline_terms
+    from repro.configs import INPUT_SHAPES, resolve
+    from repro.distributed.sharding import use_mesh
+    from repro.distributed.steps import build_jitted
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.scan_config import set_unroll
+    from repro.perf import overrides as perf_overrides
+
+    entry = resolve(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name not in entry.shapes:
+        return {"arch": arch_id, "shape": shape_name, "status": "skipped",
+                "note": entry.skip_notes}
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    cfg = entry.full.replace(dtype=dt, param_dtype=dt,
+                             remat=(shape.kind == "train"))
+    from repro.perf import overrides as _ov
+    _povr = _ov.get(overrides_name) if overrides_name else None
+    if _povr and _povr.get("cfg"):
+        cfg = cfg.replace(**_povr["cfg"])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "chips": mesh.size, "kind": shape.kind, "unroll": bool(unroll)}
+    t0 = time.time()
+    try:
+        rules = {}
+        if shape.global_batch < mesh.shape.get("data", 1):
+            rules["batch"] = None
+        povr = perf_overrides.get(overrides_name) if overrides_name else None
+        rules.update((povr or {}).get("rules", {}))
+        with use_mesh(mesh, rules), set_unroll(True if unroll else 1):
+            fn, args, _meta = build_jitted(
+                cfg, mesh, shape,
+                param_overrides=(povr or {}).get("param_overrides"))
+            lowered = fn.lower(*args)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        coll = collective_bytes(text)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "mem": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_per_device": (ma.argument_size_in_bytes
+                                    + ma.temp_size_in_bytes
+                                    + ma.output_size_in_bytes
+                                    - ma.alias_size_in_bytes),
+            },
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes_per_device": coll,
+            "collective_breakdown": collective_breakdown(text),
+            "model_flops_total": model_flops(cfg, shape),
+        })
+        terms = roofline_terms(rec["flops_per_device"],
+                               rec["bytes_per_device"], coll,
+                               rec["model_flops_total"], chips=mesh.size)
+        rec["roofline"] = terms.as_row()
+        if save_hlo and out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            hp = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}"
+                              + ("__unroll" if unroll else "") + ".hlo.txt")
+            with open(hp, "w") as f:
+                f.write(text)
+            rec["hlo_path"] = hp
+    except Exception as e:  # noqa: BLE001 — record and keep sweeping
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-3000:]})
+    rec["total_s"] = round(time.time() - t0, 2)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = ("__unroll" if unroll else "") + \
+            (f"__{overrides_name}" if overrides_name else "")
+        path = os.path.join(
+            out_dir, f"{arch_id}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+    return rec
+
+
+def main() -> None:
+    from repro.configs import ARCH_IDS, INPUT_SHAPES, resolve
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--unroll", action="store_true",
+                    help="fully unroll layer scans (exact cost analysis; "
+                         "slow compiles)")
+    ap.add_argument("--overrides", default=None,
+                    help="named perf-override set (repro.perf.overrides)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    assigned = [a for a in ARCH_IDS if a != "gpt2-xl"]
+    archs = assigned if (args.all or not args.arch) else [args.arch]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch:24s} {shape:12s} {mesh_name:8s}"
+                if args.skip_existing:
+                    suffix = ("__unroll" if args.unroll else "") + \
+                        (f"__{args.overrides}" if args.overrides else "")
+                    p = os.path.join(args.out,
+                                     f"{arch}__{shape}__{mesh_name}{suffix}.json")
+                    if os.path.exists(p):
+                        print(f"{tag} cached")
+                        continue
+                rec = run_one(arch, shape, mp, args.out, args.save_hlo,
+                              args.unroll, args.overrides)
+                results.append(rec)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"{tag} OK compile={rec['compile_s']:7.1f}s "
+                          f"mem/dev={rec['mem']['peak_per_device']/2**30:6.2f}GiB "
+                          f"dom={r['dominant']:10s} "
+                          f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                          f"coll={r['collective_s']:.2e}")
+                elif rec["status"] == "skipped":
+                    print(f"{tag} SKIP ({rec['note'][:60]})")
+                else:
+                    print(f"{tag} FAIL {rec['error'][:140]}")
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\n{len(results)} runs, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set XLA_FLAGS before the
+first jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e production mesh: 16×16 = 256 chips per pod; the multi-pod
+    variant adds a leading pod axis (2 × 256 = 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever this host has (1 CPU device in the container) — smoke tests
+    and examples run on this."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,2 @@
+"""Model zoo: unified causal LM (dense/MoE/hybrid/xLSTM/VLM) + enc-dec."""
+from . import attention, causal_lm, encdec, layers, moe, ssm, xlstm

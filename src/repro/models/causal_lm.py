@@ -1,0 +1,750 @@
+"""Unified causal LM covering every decoder-only family in the assigned pool:
+
+* ``dense``  — (GQA + SwiGLU/GELU) × L                 (llama3, mistral-nemo,
+               stablelm, granite, gpt2)
+* ``moe``    — (GQA + MoE) × L                         (mixtral, deepseek-moe)
+* ``hybrid`` — Mamba2 × L with shared attention blocks (zamba2)
+* ``xlstm``  — mLSTM/sLSTM pattern                     (xlstm-1.3b)
+* ``vlm``    — dense/hybrid LM consuming stub patch embeddings (internvl2)
+
+Layers are *scanned* over stacked parameters (compile time O(1) in depth);
+the scan structure is exported via :func:`segments` so the roofline harness
+can multiply per-body costs by trip counts (XLA cost_analysis counts a while
+body once — measured, see EXPERIMENTS.md §Roofline methodology).
+
+Three entry points used by the launcher / dry-run:
+  ``init``          params
+  ``train_loss``    full-sequence teacher-forced loss (train_4k)
+  ``prefill``       full-sequence forward + cache      (prefill_32k)
+  ``decode_step``   one token against a cache          (decode_32k, long_500k)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelCfg
+from repro.distributed.sharding import constrain
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm
+from . import xlstm as xl
+from .scan_config import scan as _scan
+from .layers import (cross_entropy, dense, dense_init, embed, embed_init,
+                     mlp, mlp_init, norm_apply, norm_init)
+
+
+class Segment(NamedTuple):
+    name: str       # params/cache key
+    kind: str       # dense | moe | mamba | zamba_group | xlstm_group
+    count: int      # scan trip count
+    inner: int = 0  # inner layers per trip (grouped kinds)
+
+
+def segments(cfg: ModelCfg) -> List[Segment]:
+    if cfg.family in ("dense", "vlm"):
+        return [Segment("blocks", "dense", cfg.n_layers)]
+    if cfg.family == "moe":
+        return [Segment("blocks", "moe", cfg.n_layers)]
+    if cfg.family == "hybrid":
+        g, rem = divmod(cfg.n_layers, cfg.attn_every)
+        segs = [Segment("groups", "zamba_group", g, cfg.attn_every)]
+        if rem:
+            segs.append(Segment("tail", "mamba", rem))
+        return segs
+    if cfg.family == "xlstm":
+        g, rem = divmod(cfg.n_layers, cfg.slstm_every)
+        segs = [Segment("groups", "xlstm_group", g, cfg.slstm_every)]
+        if rem:
+            segs.append(Segment("tail", "mlstm", rem))
+        return segs
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def _mamba_cfg(cfg: ModelCfg) -> ssm.MambaCfg:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return ssm.MambaCfg(d_model=cfg.d_model, d_inner=d_inner,
+                        n_heads=d_inner // cfg.ssm_head_dim,
+                        head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state,
+                        chunk=cfg.ssm_chunk)
+
+
+def _xlstm_cfg(cfg: ModelCfg) -> xl.XLSTMCfg:
+    return xl.XLSTMCfg(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+# ==================================================================== init ==
+def _dense_block_init(rng, cfg: ModelCfg):
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim,
+                                   cfg.param_dtype, cfg.qkv_bias),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.param_dtype)}
+
+
+def _moe_block_init(rng, cfg: ModelCfg):
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim,
+                                   cfg.param_dtype, cfg.qkv_bias),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "moe": moe_mod.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                    cfg.n_shared_experts,
+                                    dtype=cfg.param_dtype)}
+
+
+def _mamba_block_init(rng, cfg: ModelCfg):
+    return {"ln": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mamba": ssm.mamba_init(rng, _mamba_cfg(cfg), cfg.param_dtype)}
+
+
+def _shared_attn_init(rng, cfg: ModelCfg):
+    """Zamba2 shared transformer block: attention + MLP (the assigned
+    d_ff=14336 lives here), weights reused across invocations."""
+    k1, k2 = jax.random.split(rng)
+    p = {"ln": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+         "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim,
+                                cfg.param_dtype)}
+    if cfg.d_ff > 0:
+        p["ln2"] = norm_init(cfg.norm, cfg.d_model, cfg.param_dtype)
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.param_dtype)
+    return p
+
+
+def _mlstm_block_init(rng, cfg: ModelCfg):
+    return {"ln": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mlstm": xl.mlstm_init(rng, _xlstm_cfg(cfg), cfg.param_dtype)}
+
+
+def _slstm_block_init(rng, cfg: ModelCfg):
+    return {"ln": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "slstm": xl.slstm_init(rng, _xlstm_cfg(cfg), cfg.param_dtype)}
+
+
+def _stack_init(init_fn, rng, n: int):
+    return jax.vmap(init_fn)(jax.random.split(rng, n))
+
+
+def init(cfg: ModelCfg, rng: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model,
+                            cfg.param_dtype),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], cfg.d_model, cfg.vocab_padded,
+                                    cfg.param_dtype, scale=0.02)
+    if cfg.rope_fraction == 0.0:
+        params["pos_embed"] = embed_init(ks[2], cfg.max_seq, cfg.d_model,
+                                         cfg.param_dtype)
+    if cfg.n_prefix > 0:
+        params["prefix_proj"] = dense_init(ks[3], cfg.d_frontend, cfg.d_model,
+                                           cfg.param_dtype)
+    for i, seg in enumerate(segments(cfg)):
+        k = jax.random.fold_in(ks[4], i)
+        if seg.kind == "dense":
+            params[seg.name] = _stack_init(
+                lambda r: _dense_block_init(r, cfg), k, seg.count)
+        elif seg.kind == "moe":
+            params[seg.name] = _stack_init(
+                lambda r: _moe_block_init(r, cfg), k, seg.count)
+        elif seg.kind in ("mamba",):
+            params[seg.name] = _stack_init(
+                lambda r: _mamba_block_init(r, cfg), k, seg.count)
+        elif seg.kind == "mlstm":
+            params[seg.name] = _stack_init(
+                lambda r: _mlstm_block_init(r, cfg), k, seg.count)
+        elif seg.kind == "zamba_group":
+            params[seg.name] = _stack_init(
+                lambda r: _stack_init(
+                    lambda r2: _mamba_block_init(r2, cfg), r, seg.inner),
+                k, seg.count)
+        elif seg.kind == "xlstm_group":
+            params[seg.name] = {
+                "m": _stack_init(
+                    lambda r: _stack_init(
+                        lambda r2: _mlstm_block_init(r2, cfg), r,
+                        seg.inner - 1),
+                    k, seg.count),
+                "s": _stack_init(
+                    lambda r: _slstm_block_init(r, cfg),
+                    jax.random.fold_in(k, 1), seg.count),
+            }
+        else:
+            raise ValueError(seg.kind)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _stack_init(
+            lambda r: _shared_attn_init(r, cfg), ks[5],
+            max(cfg.n_shared_attn, 1))
+    return params
+
+
+# ================================================================ caches ==
+def cache_init(cfg: ModelCfg, batch: int, cache_len: int,
+               dtype=None) -> Dict[str, Any]:
+    """Empty decode caches (what serve_step threads through)."""
+    dtype = dtype or cfg.dtype
+    out: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    mc = _mamba_cfg(cfg) if cfg.family == "hybrid" else None
+    xc = _xlstm_cfg(cfg) if cfg.family == "xlstm" else None
+
+    def kv(n):
+        return {"k": jnp.zeros((n, batch, cache_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype),
+                "v": jnp.zeros((n, batch, cache_len, cfg.n_kv_heads,
+                                cfg.head_dim), dtype)}
+
+    def mamba_state(shape_prefix):
+        return {"h": jnp.zeros(shape_prefix + (batch, mc.n_heads, mc.d_state,
+                                               mc.head_dim), dtype),
+                "conv": jnp.zeros(shape_prefix + (batch, mc.conv_width - 1,
+                                                  mc.d_inner + 2 * mc.d_state),
+                                  dtype)}
+
+    def mlstm_state(shape_prefix):
+        nh, hd = xc.n_heads, xc.head_dim_m
+        return {"C": jnp.zeros(shape_prefix + (batch, nh, hd, hd), dtype),
+                "n": jnp.zeros(shape_prefix + (batch, nh, hd), dtype),
+                "m": jnp.full(shape_prefix + (batch, nh), -1e30, jnp.float32),
+                "conv": jnp.zeros(shape_prefix + (batch, xc.conv_width - 1,
+                                                  xc.d_inner_m), dtype)}
+
+    for seg in segments(cfg):
+        if seg.kind in ("dense", "moe"):
+            out[seg.name] = kv(seg.count)
+        elif seg.kind == "mamba":
+            out[seg.name] = mamba_state((seg.count,))
+        elif seg.kind == "mlstm":
+            out[seg.name] = mlstm_state((seg.count,))
+        elif seg.kind == "zamba_group":
+            out[seg.name] = mamba_state((seg.count, seg.inner))
+            out[seg.name + "_attn"] = kv(seg.count)
+        elif seg.kind == "xlstm_group":
+            nh, hd = xc.n_heads, xc.head_dim_s
+            out[seg.name] = {
+                "m": mlstm_state((seg.count, seg.inner - 1)),
+                "s": {"c": jnp.zeros((seg.count, batch, nh, hd), dtype),
+                      "n": jnp.zeros((seg.count, batch, nh, hd), dtype),
+                      "h": jnp.zeros((seg.count, batch, nh, hd), dtype),
+                      "m": jnp.full((seg.count, batch, nh, hd), -1e30,
+                                    jnp.float32)}}
+    return out
+
+
+# ============================================================ block apply ==
+def _attn_kwargs(cfg: ModelCfg, window: Optional[int]):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, window=window,
+                rope_fraction=cfg.rope_fraction, rope_theta=cfg.rope_theta)
+
+
+def _dense_block(cfg, p, x, window):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    x = x + attn.attn_train(p["attn"], h, causal=True,
+                            **_attn_kwargs(cfg, window))
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    return x + mlp(p["mlp"], h, cfg.act)
+
+
+def _dense_block_prefill(cfg, p, x, window, cache_len):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    a, kvc = attn.attn_prefill(p["attn"], h, cache_len=cache_len,
+                               **_attn_kwargs(cfg, window))
+    x = x + a
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    return x + mlp(p["mlp"], h, cfg.act), kvc
+
+
+def _dense_block_decode(cfg, p, x, kvc, pos, window):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    a, kvc = attn.attn_decode(p["attn"], h, kvc, pos,
+                              **_attn_kwargs(cfg, window))
+    x = x + a
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    return x + mlp(p["mlp"], h, cfg.act), kvc
+
+
+def _moe_ffn(cfg, p, h):
+    return moe_mod.moe_apply(p["moe"], h, cfg.top_k, cfg.moe_impl,
+                             cfg.capacity_factor)
+
+
+def _moe_block(cfg, p, x, window):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    x = x + attn.attn_train(p["attn"], h, causal=True,
+                            **_attn_kwargs(cfg, window))
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    y, aux = _moe_ffn(cfg, p, h)
+    return x + y, aux
+
+
+def _moe_block_prefill(cfg, p, x, window, cache_len):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    a, kvc = attn.attn_prefill(p["attn"], h, cache_len=cache_len,
+                               **_attn_kwargs(cfg, window))
+    x = x + a
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    y, aux = _moe_ffn(cfg, p, h)
+    return x + y, aux, kvc
+
+
+def _moe_block_decode(cfg, p, x, kvc, pos, window):
+    h = norm_apply(cfg.norm, p["ln1"], x)
+    a, kvc = attn.attn_decode(p["attn"], h, kvc, pos,
+                              **_attn_kwargs(cfg, window))
+    x = x + a
+    h = norm_apply(cfg.norm, p["ln2"], x)
+    y, _ = _moe_ffn(cfg, p, h)
+    return x + y, kvc
+
+
+def _mamba_block(cfg, p, x):
+    return x + ssm.mamba_train(p["mamba"],
+                               norm_apply(cfg.norm, p["ln"], x),
+                               _mamba_cfg(cfg))
+
+
+def _mamba_block_prefill(cfg, p, x):
+    mc = _mamba_cfg(cfg)
+    h = norm_apply(cfg.norm, p["ln"], x)
+    y, st = ssm.mamba_prefill(p["mamba"], h, mc)
+    return x + y, st
+
+
+def _mamba_block_decode(cfg, p, x_t, st, _pos):
+    mc = _mamba_cfg(cfg)
+    h = norm_apply(cfg.norm, p["ln"], x_t)
+    y, st = ssm.mamba_decode_step(p["mamba"],
+                                  h, ssm.MambaState(st["h"], st["conv"]), mc)
+    return x_t + y, {"h": st.h, "conv": st.conv}
+
+
+def _mlstm_block(cfg, p, x):
+    return x + xl.mlstm_block(p["mlstm"],
+                              norm_apply(cfg.norm, p["ln"], x),
+                              _xlstm_cfg(cfg))
+
+
+def _mlstm_block_prefill(cfg, p, x):
+    h = norm_apply(cfg.norm, p["ln"], x)
+    y, st = xl.mlstm_prefill(p["mlstm"], h, _xlstm_cfg(cfg))
+    return x + y, st
+
+
+def _mlstm_block_decode(cfg, p, x_t, st, _pos):
+    h = norm_apply(cfg.norm, p["ln"], x_t)
+    y, st2 = xl.mlstm_decode_step(
+        p["mlstm"], h, xl.MLSTMState(st["C"], st["n"], st["m"], st["conv"]),
+        _xlstm_cfg(cfg))
+    return x_t + y, {"C": st2.C, "n": st2.n, "m": st2.m, "conv": st2.conv}
+
+
+def _slstm_block(cfg, p, x):
+    return x + xl.slstm_block(p["slstm"],
+                              norm_apply(cfg.norm, p["ln"], x),
+                              _xlstm_cfg(cfg))
+
+
+def _slstm_block_decode(cfg, p, x_t, st, _pos):
+    h = norm_apply(cfg.norm, p["ln"], x_t)
+    y, st2 = xl.slstm_decode_step(
+        p["slstm"], h, xl.SLSTMState(st["c"], st["n"], st["h"], st["m"]),
+        _xlstm_cfg(cfg))
+    return x_t + y, {"c": st2.c, "n": st2.n, "h": st2.h, "m": st2.m}
+
+
+def _shared_mlp(cfg, sp, x):
+    if "mlp" not in sp:
+        return x
+    h = norm_apply(cfg.norm, sp["ln2"], x)
+    return x + mlp(sp["mlp"], h, cfg.act)
+
+
+def _shared_attn_apply(cfg, sp, x, window):
+    h = norm_apply(cfg.norm, sp["ln"], x)
+    x = x + attn.attn_train(sp["attn"], h, causal=True,
+                            **_attn_kwargs(cfg, window))
+    return _shared_mlp(cfg, sp, x)
+
+
+def _shared_attn_prefill(cfg, sp, x, window, cache_len):
+    h = norm_apply(cfg.norm, sp["ln"], x)
+    a, kvc = attn.attn_prefill(sp["attn"], h, cache_len=cache_len,
+                               **_attn_kwargs(cfg, window))
+    return _shared_mlp(cfg, sp, x + a), kvc
+
+
+def _shared_attn_decode(cfg, sp, x, kvc, pos, window):
+    h = norm_apply(cfg.norm, sp["ln"], x)
+    a, kvc = attn.attn_decode(sp["attn"], h, kvc, pos,
+                              **_attn_kwargs(cfg, window))
+    return _shared_mlp(cfg, sp, x + a), kvc
+
+
+# =============================================================== forward ==
+def _pick(tree, idx):
+    return jax.tree_util.tree_map(lambda a: a[idx], tree)
+
+
+def _dyn_pick(tree, idx):
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+        tree)
+
+
+def _embed_tokens(cfg: ModelCfg, params, tokens, prefix_embeds, pos0=0):
+    x = embed(params["embed"], tokens, cfg.dtype)
+    if cfg.rope_fraction == 0.0:
+        S = tokens.shape[1]
+        pos = jnp.arange(pos0, pos0 + S)
+        x = x + embed(params["pos_embed"], pos, cfg.dtype)[None]
+    if cfg.n_prefix > 0:
+        if prefix_embeds is None:
+            raise ValueError(f"{cfg.name} requires prefix_embeds")
+        pref = dense(params["prefix_proj"], prefix_embeds.astype(cfg.dtype))
+        x = jnp.concatenate([pref, x], axis=1)
+    return x
+
+
+def forward(cfg: ModelCfg, params, tokens: jax.Array,
+            prefix_embeds: Optional[jax.Array] = None,
+            window: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits, aux_loss)."""
+    window = window if window is not None else cfg.window
+    x = _embed_tokens(cfg, params, tokens, prefix_embeds)
+    x = constrain(x, ("batch", "act_seq", None))
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots" else None)
+        ck = (lambda f: jax.checkpoint(f, policy=policy))
+    else:
+        ck = (lambda f: f)
+
+    for seg in segments(cfg):
+        p_seg = params[seg.name]
+        if seg.kind == "dense":
+            def body(h, pl):
+                h = _dense_block(cfg, pl, h, window)
+                return constrain(h, ("batch", "act_seq", None)), None
+            x, _ = _scan(ck(body), x, p_seg)
+        elif seg.kind == "moe":
+            def body(h, pl):
+                h, a = _moe_block(cfg, pl, h, window)
+                return constrain(h, ("batch", "act_seq", None)), a
+            x, auxs = _scan(ck(body), x, p_seg)
+            aux = aux + jnp.sum(auxs)
+        elif seg.kind == "mamba":
+            def body(h, pl):
+                return _mamba_block(cfg, pl, h), None
+            x, _ = _scan(ck(body), x, p_seg)
+        elif seg.kind == "mlstm":
+            def body(h, pl):
+                return _mlstm_block(cfg, pl, h), None
+            x, _ = _scan(ck(body), x, p_seg)
+        elif seg.kind == "zamba_group":
+            shared = params["shared_attn"]
+            n_sh = max(cfg.n_shared_attn, 1)
+
+            def group_body(carry, pl_g):
+                h, g = carry
+
+                def inner(h2, pl):
+                    return _mamba_block(cfg, pl, h2), None
+                h, _ = _scan(inner, h, pl_g)
+                sp = _dyn_pick(shared, g % n_sh)
+                h = _shared_attn_apply(cfg, sp, h, window)
+                return (constrain(h, ("batch", "act_seq", None)), g + 1), None
+            (x, _), _ = _scan(ck(group_body), (x, jnp.int32(0)), p_seg)
+        elif seg.kind == "xlstm_group":
+            def group_body(h, pl_g):
+                def inner(h2, pl):
+                    return _mlstm_block(cfg, pl, h2), None
+                h, _ = _scan(inner, h, pl_g["m"])
+                h = _slstm_block(cfg, pl_g["s"], h)
+                return constrain(h, ("batch", "act_seq", None)), None
+            x, _ = _scan(ck(group_body), x, p_seg)
+        else:
+            raise ValueError(seg.kind)
+
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    logits = _head(cfg, params, x)
+    return constrain(logits, ("batch", None, "vocab")), aux
+
+
+def _head(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = dense(params["head"], x)
+    if cfg.vocab_padded != cfg.vocab:
+        # mask padding classes so the softmax is over the true vocabulary
+        valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+def train_loss(cfg: ModelCfg, params, batch: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("prefix_embeds"))
+    if cfg.n_prefix > 0:
+        logits = logits[:, cfg.n_prefix:, :]
+    ce = cross_entropy(logits, batch["labels"])
+    loss = ce + cfg.aux_loss_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# =============================================================== prefill ==
+def prefill(cfg: ModelCfg, params, tokens: jax.Array,
+            cache_len: Optional[int] = None,
+            prefix_embeds: Optional[jax.Array] = None,
+            window: Optional[int] = None
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Forward over the prompt, returning (last-position logits, cache)."""
+    window = window if window is not None else cfg.window
+    x = _embed_tokens(cfg, params, tokens, prefix_embeds)
+    x = constrain(x, ("batch", None, None))
+    B, S = x.shape[:2]
+    cache_len = cache_len or S
+    cache: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+
+    for seg in segments(cfg):
+        p_seg = params[seg.name]
+        if seg.kind in ("dense", "moe"):
+            def body(h, pl):
+                if seg.kind == "dense":
+                    h2, kvc = _dense_block_prefill(cfg, pl, h, window,
+                                                   cache_len)
+                else:
+                    h2, _, kvc = _moe_block_prefill(cfg, pl, h, window,
+                                                    cache_len)
+                return constrain(h2, ("batch", None, None)), \
+                    {"k": kvc.k, "v": kvc.v}
+            x, kvs = _scan(body, x, p_seg)
+            cache[seg.name] = kvs
+        elif seg.kind == "mamba":
+            def body(h, pl):
+                h2, st = _mamba_block_prefill(cfg, pl, h)
+                return h2, {"h": st.h, "conv": st.conv}
+            x, sts = _scan(body, x, p_seg)
+            cache[seg.name] = sts
+        elif seg.kind == "mlstm":
+            def body(h, pl):
+                h2, st = _mlstm_block_prefill(cfg, pl, h)
+                return h2, {"C": st.C, "n": st.n, "m": st.m, "conv": st.conv}
+            x, sts = _scan(body, x, p_seg)
+            cache[seg.name] = sts
+        elif seg.kind == "zamba_group":
+            shared = params["shared_attn"]
+            n_sh = max(cfg.n_shared_attn, 1)
+
+            def group_body(carry, pl_g):
+                h, g = carry
+
+                def inner(h2, pl):
+                    h3, st = _mamba_block_prefill(cfg, pl, h2)
+                    return h3, {"h": st.h, "conv": st.conv}
+                h, sts = _scan(inner, h, pl_g)
+                sp = _dyn_pick(shared, g % n_sh)
+                h, kvc = _shared_attn_prefill(cfg, sp, h, window, cache_len)
+                return (constrain(h, ("batch", None, None)), g + 1), \
+                    (sts, {"k": kvc.k, "v": kvc.v})
+            (x, _), (sts, kvs) = _scan(group_body, (x, jnp.int32(0)),
+                                              p_seg)
+            cache[seg.name] = sts
+            cache[seg.name + "_attn"] = kvs
+        elif seg.kind == "xlstm_group":
+            def group_body(h, pl_g):
+                def inner(h2, pl):
+                    h3, st = _mlstm_block_prefill(cfg, pl, h2)
+                    return h3, {"C": st.C, "n": st.n, "m": st.m,
+                                "conv": st.conv}
+                h, msts = _scan(inner, h, pl_g["m"])
+                hh = norm_apply(cfg.norm, pl_g["s"]["ln"], h)
+                y, sst = xl.slstm_seq(pl_g["s"]["slstm"], hh, _xlstm_cfg(cfg))
+                # FFN part of the sLSTM block
+                y2 = xl.slstm_block_ffn(pl_g["s"]["slstm"], y)
+                h = h + y2
+                return constrain(h, ("batch", None, None)), \
+                    (msts, {"c": sst.c, "n": sst.n, "h": sst.h, "m": sst.m})
+            x, (msts, ssts) = _scan(group_body, x, p_seg)
+            cache[seg.name] = {"m": msts, "s": ssts}
+        else:
+            raise ValueError(seg.kind)
+
+    x = norm_apply(cfg.norm, params["final_norm"], x[:, -1:, :])
+    logits = _head(cfg, params, x)
+    return logits, cache
+
+
+# ================================================================ decode ==
+def decode_step(cfg: ModelCfg, params, cache: Dict[str, Any],
+                tokens: jax.Array, window: Optional[int] = None
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decode step.  tokens: (B, 1) int32; cache from
+    :func:`cache_init`/:func:`prefill`.  Returns (logits (B,1,V), cache)."""
+    window = window if window is not None else cfg.window
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens, cfg.dtype)
+    if cfg.rope_fraction == 0.0:
+        x = x + embed(params["pos_embed"], pos[None], cfg.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    for seg in segments(cfg):
+        p_seg = params[seg.name]
+        if seg.kind in ("dense", "moe"):
+            def body(h, xs):
+                pl, c = xs
+                kvc = attn.KVCache(c["k"], c["v"])
+                if seg.kind == "dense":
+                    h2, kvc = _dense_block_decode(cfg, pl, h, kvc, pos, window)
+                else:
+                    h2, kvc = _moe_block_decode(cfg, pl, h, kvc, pos, window)
+                return h2, {"k": kvc.k, "v": kvc.v}
+            x, kvs = _scan(body, x, (p_seg, cache[seg.name]))
+            new_cache[seg.name] = kvs
+        elif seg.kind == "mamba":
+            def body(h, xs):
+                pl, c = xs
+                h1 = h[:, 0, :]
+                h2, c2 = _mamba_block_decode(cfg, pl, h1, c, pos)
+                return h2[:, None, :], c2
+            x, sts = _scan(body, x, (p_seg, cache[seg.name]))
+            new_cache[seg.name] = sts
+        elif seg.kind == "mlstm":
+            def body(h, xs):
+                pl, c = xs
+                h2, c2 = _mlstm_block_decode(cfg, pl, h[:, 0, :], c, pos)
+                return h2[:, None, :], c2
+            x, sts = _scan(body, x, (p_seg, cache[seg.name]))
+            new_cache[seg.name] = sts
+        elif seg.kind == "zamba_group":
+            shared = params["shared_attn"]
+            n_sh = max(cfg.n_shared_attn, 1)
+
+            def group_body(carry, xs):
+                h, g = carry
+                pl_g, c_g, ckv = xs
+
+                def inner(h2, xs2):
+                    pl, c = xs2
+                    h3, c2 = _mamba_block_decode(cfg, pl, h2[:, 0, :], c, pos)
+                    return h3[:, None, :], c2
+                h, sts = _scan(inner, h, (pl_g, c_g))
+                sp = _dyn_pick(shared, g % n_sh)
+                h, kvc = _shared_attn_decode(
+                    cfg, sp, h, attn.KVCache(ckv["k"], ckv["v"]), pos, window)
+                return (h, g + 1), (sts, {"k": kvc.k, "v": kvc.v})
+            (x, _), (sts, kvs) = _scan(
+                group_body, (x, jnp.int32(0)),
+                (p_seg, cache[seg.name], cache[seg.name + "_attn"]))
+            new_cache[seg.name] = sts
+            new_cache[seg.name + "_attn"] = kvs
+        elif seg.kind == "xlstm_group":
+            def group_body(h, xs):
+                pl_g, c_g = xs
+
+                def inner(h2, xs2):
+                    pl, c = xs2
+                    h3, c2 = _mlstm_block_decode(cfg, pl, h2[:, 0, :], c, pos)
+                    return h3[:, None, :], c2
+                h, msts = _scan(inner, h, (pl_g["m"], c_g["m"]))
+                h1, s2 = _slstm_block_decode(cfg, pl_g["s"], h[:, 0, :],
+                                             c_g["s"], pos)
+                return h1[:, None, :], (msts, s2)
+            x, (msts, ssts) = _scan(group_body, x,
+                                           (p_seg, cache[seg.name]))
+            new_cache[seg.name] = {"m": msts, "s": ssts}
+        else:
+            raise ValueError(seg.kind)
+
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    logits = _head(cfg, params, x)
+    return logits, new_cache
+
+
+# ============================================================== analytics ==
+def count_params(cfg: ModelCfg) -> int:
+    """Analytic parameter count (cross-checked against init in tests)."""
+    d, V = cfg.d_model, cfg.vocab_padded
+    total = V * d                                 # embed
+    if not cfg.tie_embeddings:
+        total += d * V                            # head
+    if cfg.rope_fraction == 0.0:
+        total += cfg.max_seq * d
+    if cfg.n_prefix > 0:
+        total += cfg.d_frontend * d
+    nrm = 2 * d if cfg.norm == "layernorm" else d
+    total += nrm                                  # final norm
+
+    def attn_params():
+        return d * cfg.n_heads * cfg.head_dim * 2 \
+            + d * cfg.n_kv_heads * cfg.head_dim * 2 \
+            + (cfg.n_heads * cfg.head_dim + 2 * cfg.n_kv_heads * cfg.head_dim
+               if cfg.qkv_bias else 0)
+
+    def mlp_params(d_ff):
+        mults = 3 if cfg.act in ("silu", "swiglu") else 2
+        return d * d_ff * mults
+
+    def mamba_params():
+        mc = _mamba_cfg(cfg)
+        di, ds, nh = mc.d_inner, mc.d_state, mc.n_heads
+        return (d * (2 * di + 2 * ds + nh)            # in_proj
+                + (di + 2 * ds) * (mc.conv_width + 1)  # conv w + b
+                + 3 * nh + di                          # A_log, D, dt_bias, norm
+                + di * d)                              # out_proj
+
+    def mlstm_params():
+        c = _xlstm_cfg(cfg)
+        di, hd = c.d_inner_m, c.head_dim_m
+        return (d * 2 * di + di * (c.conv_width + 1)
+                + 3 * cfg.n_heads * hd * hd
+                + di * 2 * cfg.n_heads + di + di * d + cfg.n_heads)
+
+    def slstm_params():
+        c = _xlstm_cfg(cfg)
+        hd = c.head_dim_s
+        d_ff = xl._slstm_ffn_width(c)
+        return (d * 4 * d + 4 * cfg.n_heads * hd * hd + 4 * d + 2 * d
+                + d * d_ff * 2 + d_ff * d + cfg.n_heads * hd)
+
+    for seg in segments(cfg):
+        if seg.kind == "dense":
+            total += seg.count * (attn_params() + mlp_params(cfg.d_ff)
+                                  + 2 * nrm)
+        elif seg.kind == "moe":
+            per = attn_params() + 2 * nrm + d * cfg.n_experts \
+                + cfg.n_experts * d * cfg.d_ff * 3
+            if cfg.n_shared_experts:
+                per += d * (cfg.n_shared_experts * cfg.d_ff) * 3
+            total += seg.count * per
+        elif seg.kind == "mamba":
+            total += seg.count * (mamba_params() + nrm)
+        elif seg.kind == "mlstm":
+            total += seg.count * (mlstm_params() + nrm)
+        elif seg.kind == "zamba_group":
+            total += seg.count * seg.inner * (mamba_params() + nrm)
+        elif seg.kind == "xlstm_group":
+            total += seg.count * ((seg.inner - 1) * (mlstm_params() + nrm)
+                                  + slstm_params() + nrm)
+    if cfg.family == "hybrid":
+        per_shared = attn_params() + nrm
+        if cfg.d_ff > 0:
+            per_shared += mlp_params(cfg.d_ff) + nrm
+        total += max(cfg.n_shared_attn, 1) * per_shared
+    return int(total)

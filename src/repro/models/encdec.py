@@ -1,0 +1,231 @@
+"""Encoder-decoder seq2seq LM (seamless-m4t backbone).
+
+The modality frontend (mel-spectrogram + conv codec) is a stub per the
+assignment carve-out: ``src_embeds`` arrives as precomputed frame embeddings
+(B, S_src, d_frontend), projected into d_model.  The transformer backbone —
+bidirectional encoder, causal decoder with cross-attention — is fully
+implemented.
+
+``n_layers`` in the assigned config counts encoder+decoder
+(n_enc = n_dec = n_layers / 2, DESIGN.md §5).  Decode keeps two caches: the
+decoder self-attention KV cache (grows with generated tokens) and the fixed
+cross-attention KV computed once from the encoder memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.distributed.sharding import constrain
+from . import attention as attn
+from .scan_config import scan as _scan
+from .layers import (cross_entropy, dense, dense_init, embed, embed_init,
+                     mlp, mlp_init, norm_apply, norm_init)
+
+
+def _enc_block_init(rng, cfg: ModelCfg):
+    k1, k2 = jax.random.split(rng)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim,
+                                   cfg.param_dtype),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.param_dtype)}
+
+
+def _dec_block_init(rng, cfg: ModelCfg):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "self_attn": attn.attn_init(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim,
+                                        cfg.param_dtype),
+            "ln_x": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "cross_attn": attn.attn_init(k2, cfg.d_model, cfg.n_heads,
+                                         cfg.n_kv_heads, cfg.head_dim,
+                                         cfg.param_dtype),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, cfg.act,
+                            cfg.param_dtype)}
+
+
+def init(cfg: ModelCfg, rng: jax.Array) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 6)
+    n_enc, n_dec = cfg.n_enc_layers, cfg.n_dec_layers
+    return {
+        "src_proj": dense_init(ks[0], cfg.d_frontend, cfg.d_model,
+                               cfg.param_dtype),
+        "embed": embed_init(ks[1], cfg.vocab_padded, cfg.d_model,
+                             cfg.param_dtype),
+        "enc": jax.vmap(lambda r: _enc_block_init(r, cfg))(
+            jax.random.split(ks[2], n_enc)),
+        "enc_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "dec": jax.vmap(lambda r: _dec_block_init(r, cfg))(
+            jax.random.split(ks[3], n_dec)),
+        "final_norm": norm_init(cfg.norm, cfg.d_model, cfg.param_dtype),
+        "head": dense_init(ks[4], cfg.d_model, cfg.vocab_padded,
+                           cfg.param_dtype, scale=0.02),
+    }
+
+
+def _kw(cfg: ModelCfg, rope: bool = True):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, window=None,
+                rope_fraction=cfg.rope_fraction if rope else 0.0,
+                rope_theta=cfg.rope_theta)
+
+
+def encode(cfg: ModelCfg, params, src_embeds: jax.Array) -> jax.Array:
+    """src_embeds: (B, S_src, d_frontend) -> encoder memory (B, S_src, d)."""
+    x = dense(params["src_proj"], src_embeds.astype(cfg.dtype))
+    x = constrain(x, ("batch", None, None))
+
+    def body(h, pl):
+        hh = norm_apply(cfg.norm, pl["ln1"], h)
+        h = h + attn.attn_train(pl["attn"], hh, causal=False, **_kw(cfg))
+        hh = norm_apply(cfg.norm, pl["ln2"], h)
+        h = h + mlp(pl["mlp"], hh, cfg.act)
+        return constrain(h, ("batch", "act_seq", None)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = _scan(body, x, params["enc"])
+    return norm_apply(cfg.norm, params["enc_norm"], x)
+
+
+def _decoder_train(cfg: ModelCfg, params, tgt_tokens, memory):
+    x = embed(params["embed"], tgt_tokens, cfg.dtype)
+    x = constrain(x, ("batch", None, None))
+
+    def body(h, pl):
+        hh = norm_apply(cfg.norm, pl["ln1"], h)
+        h = h + attn.attn_train(pl["self_attn"], hh, causal=True, **_kw(cfg))
+        hh = norm_apply(cfg.norm, pl["ln_x"], h)
+        h = h + attn.attn_train(pl["cross_attn"], hh, causal=False,
+                                x_kv=memory, **_kw(cfg, rope=False))
+        hh = norm_apply(cfg.norm, pl["ln2"], h)
+        h = h + mlp(pl["mlp"], hh, cfg.act)
+        return constrain(h, ("batch", "act_seq", None)), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = _scan(body, x, params["dec"])
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    return _head(cfg, params, x)
+
+
+def _head(cfg: ModelCfg, params, x):
+    logits = dense(params["head"], x)
+    if cfg.vocab_padded != cfg.vocab:
+        valid = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(valid, logits, -1e30)
+    return logits
+
+
+def train_loss(cfg: ModelCfg, params, batch: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """batch: src_embeds (B,S_src,d_fe), tokens (B,S_tgt), labels."""
+    memory = encode(cfg, params, batch["src_embeds"])
+    logits = _decoder_train(cfg, params, batch["tokens"], memory)
+    ce = cross_entropy(logits, batch["labels"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------- serving --
+def _cross_kv(cfg, pl, memory):
+    B, Sk = memory.shape[:2]
+    k = dense({"w": pl["cross_attn"]["wk"]["w"]}, memory)
+    v = dense({"w": pl["cross_attn"]["wv"]["w"]}, memory)
+    return (k.reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim))
+
+
+def prefill(cfg: ModelCfg, params, src_embeds: jax.Array,
+            tgt_tokens: jax.Array, cache_len: int
+            ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Encode source + run the decoder over a target prefix, building caches."""
+    memory = encode(cfg, params, src_embeds)
+    x = embed(params["embed"], tgt_tokens, cfg.dtype)
+    S = tgt_tokens.shape[1]
+
+    def body(h, pl):
+        hh = norm_apply(cfg.norm, pl["ln1"], h)
+        a, kvc = attn.attn_prefill(pl["self_attn"], hh, cache_len=cache_len,
+                                   **_kw(cfg))
+        h = h + a
+        hh = norm_apply(cfg.norm, pl["ln_x"], h)
+        h = h + attn.attn_train(pl["cross_attn"], hh, causal=False,
+                                x_kv=memory, **_kw(cfg, rope=False))
+        hh = norm_apply(cfg.norm, pl["ln2"], h)
+        h = h + mlp(pl["mlp"], hh, cfg.act)
+        ck, cv = _cross_kv(cfg, pl, memory)
+        return h, {"k": kvc.k, "v": kvc.v, "xk": ck, "xv": cv}
+
+    x, caches = _scan(body, x, params["dec"])
+    x = norm_apply(cfg.norm, params["final_norm"], x[:, -1:, :])
+    logits = _head(cfg, params, x)
+    return logits, {"pos": jnp.asarray(S, jnp.int32), "dec": caches}
+
+
+def cache_init(cfg: ModelCfg, batch: int, cache_len: int, src_len: int,
+               dtype=None) -> Dict[str, Any]:
+    dtype = dtype or cfg.dtype
+    n_dec = cfg.n_dec_layers
+
+    def z(*shape):
+        return jnp.zeros((n_dec,) + shape, dtype)
+
+    return {"pos": jnp.zeros((), jnp.int32),
+            "dec": {"k": z(batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                    "v": z(batch, cache_len, cfg.n_kv_heads, cfg.head_dim),
+                    "xk": z(batch, src_len, cfg.n_kv_heads, cfg.head_dim),
+                    "xv": z(batch, src_len, cfg.n_kv_heads, cfg.head_dim)}}
+
+
+def decode_step(cfg: ModelCfg, params, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One decoder token against (self KV cache, fixed cross KV)."""
+    pos = cache["pos"]
+    x = embed(params["embed"], tokens, cfg.dtype)
+    x = constrain(x, ("batch", None, None))
+
+    def body(h, xs):
+        pl, c = xs
+        hh = norm_apply(cfg.norm, pl["ln1"], h)
+        a, kvc = attn.attn_decode(pl["self_attn"], hh,
+                                  attn.KVCache(c["k"], c["v"]), pos,
+                                  **_kw(cfg))
+        h = h + a
+        hh = norm_apply(cfg.norm, pl["ln_x"], h)
+        # cross-attention against fixed memory KV (no mask, no rope)
+        q = dense({"w": pl["cross_attn"]["wq"]["w"]}, hh)
+        B = q.shape[0]
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        o = attn.sdpa(q, c["xk"].astype(q.dtype), c["xv"].astype(q.dtype),
+                      None)
+        o = dense({"w": pl["cross_attn"]["wo"]["w"]},
+                  o.reshape(B, 1, cfg.n_heads * cfg.head_dim))
+        h = h + o
+        hh = norm_apply(cfg.norm, pl["ln2"], h)
+        h = h + mlp(pl["mlp"], hh, cfg.act)
+        return h, {"k": kvc.k, "v": kvc.v, "xk": c["xk"], "xv": c["xv"]}
+
+    x, dec = _scan(body, x, (params["dec"], cache["dec"]))
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    logits = _head(cfg, params, x)
+    return logits, {"pos": pos + 1, "dec": dec}
+
+
+def count_params(cfg: ModelCfg) -> int:
+    d, V = cfg.d_model, cfg.vocab_padded
+    nrm = 2 * d if cfg.norm == "layernorm" else d
+    attn_p = d * cfg.n_heads * cfg.head_dim * 2 \
+        + d * cfg.n_kv_heads * cfg.head_dim * 2
+    mlp_mults = 3 if cfg.act in ("silu", "swiglu") else 2
+    mlp_p = d * cfg.d_ff * mlp_mults
+    enc = cfg.n_enc_layers * (attn_p + mlp_p + 2 * nrm)
+    dec = cfg.n_dec_layers * (2 * attn_p + mlp_p + 3 * nrm)
+    return int(cfg.d_frontend * d + V * d + enc + nrm + dec + nrm + d * V)

@@ -1,0 +1,169 @@
+"""Shared neural-net layers (pure JAX, framework-free).
+
+Every layer is an (init, apply) pair of pure functions; params are plain
+dicts of jnp arrays so they stack cleanly for ``lax.scan`` over layers and
+shard cleanly under GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ------------------------------------------------------------------- norms --
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p: Dict[str, jax.Array], x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), dtype=dtype),
+            "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p: Dict[str, jax.Array], x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    return layernorm_init(d, dtype) if kind == "layernorm" else rmsnorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p, x: jax.Array) -> jax.Array:
+    return layernorm(p, x) if kind == "layernorm" else rmsnorm(p, x)
+
+
+# ----------------------------------------------------------------- linears --
+def dense_init(rng: jax.Array, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Dict[str, jax.Array]:
+    s = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return {"w": (jax.random.normal(rng, (d_in, d_out)) * s).astype(dtype)}
+
+
+def dense(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    return x @ p["w"].astype(x.dtype)
+
+
+def embed_init(rng: jax.Array, vocab: int, d: int, dtype=jnp.float32
+               ) -> Dict[str, jax.Array]:
+    return {"table": (jax.random.normal(rng, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: Dict[str, jax.Array], tokens: jax.Array, dtype=None) -> jax.Array:
+    t = p["table"]
+    if dtype is not None:
+        t = t.astype(dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+# -------------------------------------------------------------------- RoPE --
+def rope_freqs(head_dim: int, rope_fraction: float = 1.0,
+               theta: float = 10_000.0) -> np.ndarray:
+    """Inverse frequencies for the rotated slice of the head dim."""
+    rot = int(head_dim * rope_fraction) // 2 * 2
+    return 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, rope_fraction: float = 1.0,
+               theta: float = 10_000.0) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    rot = int(hd * rope_fraction) // 2 * 2
+    inv = jnp.asarray(rope_freqs(hd, rope_fraction, theta), dtype=jnp.float32)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, rot/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- FFN --
+def mlp_init(rng: jax.Array, d: int, d_ff: int, act: str = "silu",
+             dtype=jnp.float32) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {"up": dense_init(k2, d, d_ff, dtype),
+         "down": dense_init(k3, d_ff, d, dtype, scale=1.0 / math.sqrt(d_ff))}
+    if act in ("silu", "swiglu"):
+        p["gate"] = dense_init(k1, d, d_ff, dtype)
+    return p
+
+
+def mlp(p: Dict[str, jax.Array], x: jax.Array, act: str = "silu") -> jax.Array:
+    if act in ("silu", "swiglu"):
+        h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense(p["up"], x))
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return dense(p["down"], h)
+
+
+def mlp_flops(tokens: int, d: int, d_ff: int, act: str = "silu") -> float:
+    mults = 3 if act in ("silu", "swiglu") else 2
+    return 2.0 * tokens * d * d_ff * mults
+
+
+# -------------------------------------------------------------------- loss --
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -1, z_loss: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy; labels == ignore_id are masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0.0:
+        nll = nll + z_loss * jnp.square(lse)
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# -------------------------------------------------------------- conv (SSM) --
+def causal_conv1d_init(rng: jax.Array, channels: int, width: int,
+                       dtype=jnp.float32) -> Dict[str, jax.Array]:
+    s = 1.0 / math.sqrt(width)
+    return {"w": (jax.random.uniform(rng, (width, channels), minval=-s, maxval=s)
+                  ).astype(dtype),
+            "b": jnp.zeros((channels,), dtype=dtype)}
+
+
+def causal_conv1d(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: (B, S, C)."""
+    w = p["w"].astype(x.dtype)           # (W, C)
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):               # width is tiny (4); unrolled taps
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out + p["b"].astype(x.dtype)
+
+
+def causal_conv1d_step(p: Dict[str, jax.Array], x_t: jax.Array,
+                       window: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x_t: (B, C); window: (B, W-1, C) past inputs.
+    Returns (y_t, new_window)."""
+    w = p["w"].astype(x_t.dtype)         # (W, C)
+    width = w.shape[0]
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", full, w) + p["b"].astype(x_t.dtype)
+    return y, full[:, 1:, :]

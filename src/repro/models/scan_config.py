@@ -1,0 +1,35 @@
+"""Global scan-unroll switch.
+
+XLA's cost analysis counts a while-loop body once regardless of trip count,
+so the roofline harness can either (a) correct per-segment analytically
+(repro.analysis.hlo trip-count weighting) or (b) lower with scans unrolled
+and read exact numbers.  ``set_unroll`` flips (b) on for a ``with`` scope.
+Default is 1 (rolled scans — fast compiles for the dry-run gate).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_UNROLL = [1]
+
+
+def scan(body, init, xs, **kw):
+    unroll = kw.pop("unroll", None)
+    if unroll is None:
+        unroll = _UNROLL[0]
+    if unroll is True or (isinstance(unroll, int) and unroll != 1):
+        kw["unroll"] = unroll
+    return jax.lax.scan(body, init, xs, **kw)
+
+
+@contextlib.contextmanager
+def set_unroll(n):
+    """n=True -> fully unroll every model scan (exact cost analysis)."""
+    prev = _UNROLL[0]
+    _UNROLL[0] = n
+    try:
+        yield
+    finally:
+        _UNROLL[0] = prev

@@ -1,0 +1,251 @@
+"""Mamba2 (SSD) blocks — chunked matmul formulation, TPU-native.
+
+The GPU reference implements SSD with a fused Triton kernel; the TPU
+adaptation here computes the same recurrence
+
+    h_t = a_t · h_{t-1} + Δt_t · B_t ⊗ x_t          a_t = exp(A·Δt_t)
+    y_t = C_t · h_t + D · x_t
+
+in *chunked* form: the sequence splits into chunks of length Lc; intra-chunk
+terms are dense matmuls (MXU-friendly, the whole point of SSD), inter-chunk
+terms are a short ``lax.scan`` over per-chunk states (S/Lc steps).  ngroups=1
+(B/C shared across heads), scalar A per head — the Mamba2 defaults.
+
+Decode is the O(1)-state recurrence (``mamba_decode_step``), which is why
+SSM/hybrid architectures run the 500k-token decode shape (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from .layers import causal_conv1d, causal_conv1d_init, causal_conv1d_step, \
+    dense_init, rmsnorm, rmsnorm_init
+
+
+class MambaCfg(NamedTuple):
+    d_model: int
+    d_inner: int          # expand * d_model
+    n_heads: int          # d_inner // head_dim
+    head_dim: int
+    d_state: int          # ssm_state (assigned: 64)
+    conv_width: int = 4
+    chunk: int = 128
+
+
+class MambaState(NamedTuple):
+    """Decode cache for one layer."""
+    h: jax.Array          # (B, nh, d_state, head_dim)
+    conv: jax.Array       # (B, conv_width-1, d_inner + 2*d_state)
+
+
+def mamba_init(rng: jax.Array, cfg: MambaCfg, dtype=jnp.float32) -> Dict[str, Any]:
+    d, di, nh, ds = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.d_state
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    d_in_proj = 2 * di + 2 * ds + nh          # z, x, B, C, dt
+    conv_ch = di + 2 * ds
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba default init)
+    u = jax.random.uniform(k3, (nh,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt0 = jnp.exp(u)
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    return {
+        "in_proj": dense_init(k1, d, d_in_proj, dtype),
+        "conv": causal_conv1d_init(k2, conv_ch, cfg.conv_width, dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(k4, di, d, dtype, scale=1.0 / math.sqrt(di)),
+    }
+
+
+def _split_proj(cfg: MambaCfg, zxbcdt: jax.Array):
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z, x, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
+    return z, x, Bc, Cc, dt
+
+
+def _segsum_chunk(log_a: jax.Array) -> jax.Array:
+    """log_a: (..., Lc).  Returns (..., Lc, Lc) with [l, m] = Σ_{j=m+1..l},
+    -inf above the diagonal (strictly causal cumulative decay)."""
+    L = log_a.shape[-1]
+    s = jnp.cumsum(log_a, axis=-1)
+    diff = s[..., :, None] - s[..., None, :]      # s_l - s_m
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array,
+                Bm: jax.Array, Cm: jax.Array, D: jax.Array,
+                chunk: int, h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Structured state-space duality, chunked.
+
+    x: (B,S,nh,hd); dt: (B,S,nh) (post-softplus); A: (nh,) negative;
+    Bm, Cm: (B,S,ds); D: (nh,).  Returns (y (B,S,nh,hd), h_final
+    (B,nh,ds,hd))."""
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    if S % chunk != 0:
+        raise ValueError(f"seq {S} not divisible by chunk {chunk}")
+    nc = S // chunk
+    xc = x.reshape(Bsz, nc, chunk, nh, hd)
+    dtc = dt.reshape(Bsz, nc, chunk, nh)
+    Bc = Bm.reshape(Bsz, nc, chunk, ds)
+    Cc = Cm.reshape(Bsz, nc, chunk, ds)
+
+    # SSM heads ride the model axis: the (B,nc,nh,Lc,Lc) decay tensor is the
+    # memory hot-spot of chunked SSD — head-sharding it divides the footprint
+    # by the TP degree (nh=112 is divisible by 16 for zamba2-7b).
+    xc = constrain(xc, ("batch", None, None, "model", None))
+    dtc = constrain(dtc, ("batch", None, None, "model"))
+    log_a = (A[None, None, None, :] * dtc)             # (B,nc,Lc,nh) ≤ 0
+    log_a = constrain(log_a, ("batch", None, None, "model"))
+    seg = _segsum_chunk(jnp.moveaxis(log_a, -1, -2))   # (B,nc,nh,Lc,Lc)
+    seg = constrain(seg, ("batch", None, "model", None, None))
+    decay = jnp.exp(seg)
+    decay = constrain(decay, ("batch", None, "model", None, None))
+
+    # intra-chunk: y[l] += Σ_{m≤l} (C_l·B_m) exp(s_l-s_m) dt_m x_m
+    # Multi-operand einsums are decomposed MANUALLY: letting XLA pick the
+    # contraction order materialized a rank-7 (B,nc,Lc,nh,ds,hd) outer
+    # product as a scan residual — 14 GiB/layer at zamba2-7b scale
+    # (measured; see EXPERIMENTS.md §Perf).  The orders below keep every
+    # intermediate ≤ rank 6 with the head axis sharded.
+    CB = jnp.einsum("bcls,bcms->bclm", Cc, Bc)          # (B,nc,Lc,Lc)
+    W = CB[:, :, None] * decay                          # (B,nc,nh,Lc,Lc)
+    Wdt = W * jnp.moveaxis(dtc, -1, -2)[:, :, :, None, :].astype(W.dtype)
+    Y_intra = jnp.einsum("bchlm,bcmhp->bclhp", Wdt, xc.astype(W.dtype))
+
+    # per-chunk outgoing state: H_c = Σ_m exp(s_last-s_m) dt_m B_m ⊗ x_m
+    s_cum = jnp.cumsum(log_a, axis=2)                   # (B,nc,Lc,nh)
+    w_out = jnp.exp(s_cum[:, :, -1:, :] - s_cum) * dtc  # (B,nc,Lc,nh)
+    wx = w_out[..., None] * xc.astype(w_out.dtype)      # (B,nc,Lc,nh,hd)
+    H = jnp.einsum("bclhp,bcls->bchsp", wx,
+                   Bc.astype(wx.dtype))                 # (B,nc,nh,ds,hd)
+    chunk_decay = jnp.exp(s_cum[:, :, -1, :])           # (B,nc,nh)
+
+    # inter-chunk recurrence: h_{c} = decay_c · h_{c-1} + H_c  (scan over nc)
+    # State runs in f32 regardless of activation dtype — the recurrence
+    # accumulates products of decays and bf16 carries both lose precision
+    # and break scan carry-type invariance (dt/decay are f32).
+    def step(h, inp):
+        dec, Hc = inp
+        h_new = dec[:, :, None, None] * h + Hc.astype(jnp.float32)
+        return h_new, h
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bsz, nh, ds, hd), jnp.float32))
+    h_last, h_starts = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(H, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)             # (B,nc,nh,ds,hd) state at chunk start
+
+    # inter-chunk contribution: y[l] += exp(s_l) C_l · h_start
+    Ch = jnp.einsum("bcls,bchsp->bclhp", Cc.astype(jnp.float32), h_starts)
+    Y_inter = Ch * jnp.exp(s_cum)[..., None]
+    y = (Y_intra.astype(jnp.float32) + Y_inter).reshape(Bsz, S, nh, hd)
+    y = y.astype(x.dtype) + x * D[None, None, :, None].astype(x.dtype)
+    return y, h_last
+
+
+def mamba_train(p, x: jax.Array, cfg: MambaCfg) -> jax.Array:
+    """Full-sequence Mamba2 block body (no residual/out-norm — the caller
+    owns the residual stream)."""
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(causal_conv1d(p["conv"], conv_in))
+    xi, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + cfg.d_state],
+                           axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y, _ = ssd_chunked(xh, dt, A, Bc, Cc, p["D"], cfg.chunk)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return y @ p["out_proj"]["w"].astype(x.dtype)
+
+
+def mamba_prefill(p, x: jax.Array, cfg: MambaCfg
+                  ) -> Tuple[jax.Array, MambaState]:
+    """Full-sequence forward that also emits the decode state (final SSM
+    state + conv tail), so decoding can continue after the prompt."""
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_tail = conv_in[:, S - (cfg.conv_width - 1):, :]
+    conv_out = jax.nn.silu(causal_conv1d(p["conv"], conv_in))
+    xi, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + cfg.d_state],
+                           axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    xh = xi.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    y, h_last = ssd_chunked(xh, dt, A, Bc, Cc, p["D"], cfg.chunk)
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return (y @ p["out_proj"]["w"].astype(x.dtype),
+            MambaState(h=h_last.astype(x.dtype), conv=conv_tail))
+
+
+def mamba_state_init(cfg: MambaCfg, batch: int, dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        h=jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim), dtype),
+        conv=jnp.zeros((batch, cfg.conv_width - 1,
+                        cfg.d_inner + 2 * cfg.d_state), dtype))
+
+
+def mamba_decode_step(p, x_t: jax.Array, state: MambaState, cfg: MambaCfg
+                      ) -> Tuple[jax.Array, MambaState]:
+    """One token. x_t: (B, d_model) -> (y_t (B, d_model), new state)."""
+    zxbcdt = x_t @ p["in_proj"]["w"].astype(x_t.dtype)
+    z, xi, Bc, Cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xi, Bc, Cc], axis=-1)
+    conv_out, new_window = causal_conv1d_step(p["conv"], conv_in, state.conv)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bc, Cc = jnp.split(conv_out, [cfg.d_inner, cfg.d_inner + cfg.d_state],
+                           axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # (B,nh)
+    a = jnp.exp(-jnp.exp(p["A_log"])[None, :] * dt)                       # (B,nh)
+    xh = xi.reshape(x_t.shape[0], cfg.n_heads, cfg.head_dim)
+    # h = a·h + dt · B ⊗ x
+    upd = jnp.einsum("bh,bs,bhp->bhsp", dt.astype(x_t.dtype), Bc, xh)
+    h = a[:, :, None, None].astype(x_t.dtype) * state.h + upd
+    y = jnp.einsum("bs,bhsp->bhp", Cc, h) + xh * p["D"][None, :, None].astype(x_t.dtype)
+    y = y.reshape(x_t.shape[0], cfg.d_inner)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return y @ p["out_proj"]["w"].astype(x_t.dtype), MambaState(h=h, conv=new_window)
+
+
+def ssd_reference(x, dt, A, Bm, Cm, D):
+    """O(S) sequential oracle for tests: literal recurrence."""
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    h = jnp.zeros((Bsz, nh, ds, hd), jnp.float32)
+    ys = []
+    for t in range(S):
+        a = jnp.exp(A[None, :] * dt[:, t]).astype(jnp.float32)  # (B,nh)
+        upd = jnp.einsum("bh,bs,bhp->bhsp", dt[:, t], Bm[:, t], x[:, t])
+        h = a[:, :, None, None] * h + upd
+        y = jnp.einsum("bs,bhsp->bhp", Cm[:, t], h) + x[:, t] * D[None, :, None]
+        ys.append(y)
+    return jnp.stack(ys, axis=1)
+
+
+def mamba_flops(tokens: int, cfg: MambaCfg) -> float:
+    """Forward FLOPs: projections + conv + SSD (intra-chunk matmul terms)."""
+    d, di, ds, nh = cfg.d_model, cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj = 2.0 * tokens * d * (2 * di + 2 * ds + nh) + 2.0 * tokens * di * d
+    conv = 2.0 * tokens * (di + 2 * ds) * cfg.conv_width
+    Lc = cfg.chunk
+    ssd = (2.0 * tokens * Lc * ds                 # CB^T
+           + 2.0 * tokens * Lc * nh * cfg.head_dim   # (CB·decay·dt) @ x
+           + 4.0 * tokens * ds * nh * cfg.head_dim)  # state in/out
+    return proj + conv + ssd

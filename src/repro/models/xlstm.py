@@ -1,0 +1,315 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan).
+
+mLSTM training uses the stabilized parallel (quadratic) form — an
+attention-like matmul with an input/forget-gate decay matrix D — so it maps
+onto the MXU; decode uses the O(1) recurrence
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T ,  n_t = f_t n_{t-1} + i_t k_t
+    h_t = C_t q_t / max(|n_t^T q_t|, exp(-m_t))
+
+with log-space gate stabilization m_t.  sLSTM is inherently sequential
+(recurrent hidden feedback) and runs under ``lax.scan`` in both modes.
+
+Block wrappers follow the paper: mLSTM = pre-up-projection (×2) block;
+sLSTM = post-up-projection block with a gated FFN (×4/3).  ``d_ff = 0`` in
+the assigned xlstm-1.3b config means exactly this: FFN capacity lives inside
+the blocks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d, causal_conv1d_init, causal_conv1d_step, \
+    dense_init, layernorm, layernorm_init, rmsnorm, rmsnorm_init
+
+
+class XLSTMCfg(NamedTuple):
+    d_model: int
+    n_heads: int
+    proj_factor_m: float = 2.0     # mLSTM pre-up-projection
+    proj_factor_s: float = 4.0 / 3.0  # sLSTM FFN
+    conv_width: int = 4
+
+    @property
+    def d_inner_m(self) -> int:
+        return int(self.d_model * self.proj_factor_m)
+
+    @property
+    def head_dim_m(self) -> int:
+        return self.d_inner_m // self.n_heads
+
+    @property
+    def head_dim_s(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# ------------------------------------------------------------------ mLSTM --
+class MLSTMState(NamedTuple):
+    C: jax.Array    # (B, nh, hd, hd)
+    n: jax.Array    # (B, nh, hd)
+    m: jax.Array    # (B, nh)
+    conv: jax.Array  # (B, W-1, d_inner)
+
+
+def mlstm_init(rng: jax.Array, cfg: XLSTMCfg, dtype=jnp.float32) -> Dict[str, Any]:
+    d, di, nh = cfg.d_model, cfg.d_inner_m, cfg.n_heads
+    hd = cfg.head_dim_m
+    ks = jax.random.split(rng, 8)
+
+    def blockdiag(key):
+        # per-head (block-diagonal) projection, as in the official mLSTM
+        return (jax.random.normal(key, (nh, hd, hd))
+                / math.sqrt(hd)).astype(dtype)
+
+    return {
+        "up": dense_init(ks[0], d, 2 * di, dtype),       # (x_m, z)
+        "conv": causal_conv1d_init(ks[1], di, cfg.conv_width, dtype),
+        "wq": blockdiag(ks[2]),
+        "wk": blockdiag(ks[3]),
+        "wv": blockdiag(ks[4]),
+        "w_if": dense_init(ks[5], di, 2 * nh, dtype),    # i,f gate pre-acts
+        "norm": rmsnorm_init(di, dtype),
+        "down": dense_init(ks[6], di, d, dtype, scale=1.0 / math.sqrt(di)),
+        "f_bias": jnp.full((nh,), 3.0, jnp.float32),     # open forget gates
+    }
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """q/k/v: (B,S,nh,hd); i_pre/f_pre: (B,S,nh).  Stabilized parallel form."""
+    B, S, nh, hd = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))        # (B,S,nh)
+    cum = jnp.cumsum(logf, axis=1)
+    # D_log[l,m] = cum_l - cum_m + i_m  (contribution of step m to step l)
+    D_log = (cum[:, :, None, :] - cum[:, None, :, :]
+             + i_pre.astype(jnp.float32)[:, None, :, :])        # (B,Sq,Sk,nh)
+    causal = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    D_log = jnp.where(causal, D_log, -jnp.inf)
+    m_row = jnp.max(D_log, axis=2, keepdims=True)               # (B,S,1,nh)
+    m_row = jnp.maximum(m_row, -1e30)
+    D = jnp.exp(D_log - m_row)
+    scores = jnp.einsum("blhd,bmhd->blmh", q, k) / math.sqrt(hd)
+    w = scores.astype(jnp.float32) * D
+    denom = jnp.maximum(jnp.abs(w.sum(axis=2)),
+                        jnp.exp(-m_row[:, :, 0, :]))            # (B,S,nh)
+    y = jnp.einsum("blmh,bmhd->blhd", w.astype(v.dtype), v)
+    return y / denom[..., None].astype(v.dtype)
+
+
+def mlstm_block(p, x: jax.Array, cfg: XLSTMCfg) -> jax.Array:
+    """Full-sequence mLSTM block body (caller owns residual)."""
+    B, S, _ = x.shape
+    di, nh, hd = cfg.d_inner_m, cfg.n_heads, cfg.head_dim_m
+    up = x @ p["up"]["w"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(p["conv"], xm))
+    xch = xc.reshape(B, S, nh, hd)
+    q = jnp.einsum("bsnd,nde->bsne", xch, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsnd,nde->bsne", xch, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsnd,nde->bsne", xm.reshape(B, S, nh, hd),
+                   p["wv"].astype(x.dtype))
+    if_pre = xc @ p["w_if"]["w"].astype(x.dtype)                # (B,S,2nh)
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    f_pre = f_pre + p["f_bias"][None, None, :].astype(f_pre.dtype)
+    y = _mlstm_parallel(q, k, v, i_pre, f_pre).reshape(B, S, di)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return y @ p["down"]["w"].astype(x.dtype)
+
+
+def mlstm_prefill(p, x: jax.Array, cfg: XLSTMCfg
+                  ) -> Tuple[jax.Array, MLSTMState]:
+    """Parallel-form forward that also emits the recurrent state after the
+    last position (matches the decode recurrence exactly: the running
+    stabilizer m_t = max_{m≤t}(Σ_{j>m} log f_j + ĩ_m))."""
+    B, S, _ = x.shape
+    di, nh, hd = cfg.d_inner_m, cfg.n_heads, cfg.head_dim_m
+    up = x @ p["up"]["w"].astype(x.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    conv_tail = xm[:, S - (cfg.conv_width - 1):, :]
+    xc = jax.nn.silu(causal_conv1d(p["conv"], xm))
+    xch = xc.reshape(B, S, nh, hd)
+    q = jnp.einsum("bsnd,nde->bsne", xch, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsnd,nde->bsne", xch, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsnd,nde->bsne", xm.reshape(B, S, nh, hd),
+                   p["wv"].astype(x.dtype))
+    i_pre, f_pre = jnp.split(xc @ p["w_if"]["w"].astype(x.dtype), 2, axis=-1)
+    f_pre = f_pre + p["f_bias"][None, None, :].astype(f_pre.dtype)
+    y = _mlstm_parallel(q, k, v, i_pre, f_pre).reshape(B, S, di)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    out = y @ p["down"]["w"].astype(x.dtype)
+
+    # final state: C̃_S = Σ_m exp(cum_S - cum_m + i_m - m_S) v_m k_m^T
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    cum = jnp.cumsum(logf, axis=1)                       # (B,S,nh)
+    w_log = cum[:, -1:, :] - cum + i_pre.astype(jnp.float32)  # (B,S,nh)
+    m_S = jnp.max(w_log, axis=1)                          # (B,nh)
+    w = jnp.exp(w_log - m_S[:, None, :]).astype(x.dtype)  # (B,S,nh)
+    C = jnp.einsum("bsh,bshv,bshk->bhvk", w, v, k)
+    n = jnp.einsum("bsh,bshk->bhk", w, k)
+    return out, MLSTMState(C=C, n=n, m=m_S, conv=conv_tail)
+
+
+def mlstm_state_init(cfg: XLSTMCfg, batch: int, dtype=jnp.float32) -> MLSTMState:
+    nh, hd = cfg.n_heads, cfg.head_dim_m
+    return MLSTMState(
+        C=jnp.zeros((batch, nh, hd, hd), dtype),
+        n=jnp.zeros((batch, nh, hd), dtype),
+        m=jnp.full((batch, nh), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner_m), dtype))
+
+
+def mlstm_decode_step(p, x_t: jax.Array, state: MLSTMState, cfg: XLSTMCfg
+                      ) -> Tuple[jax.Array, MLSTMState]:
+    """x_t: (B, d_model)."""
+    B = x_t.shape[0]
+    di, nh, hd = cfg.d_inner_m, cfg.n_heads, cfg.head_dim_m
+    up = x_t @ p["up"]["w"].astype(x_t.dtype)
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc, new_conv = causal_conv1d_step(p["conv"], xm, state.conv)
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(B, nh, hd)
+    q = jnp.einsum("bnd,nde->bne", xch, p["wq"].astype(x_t.dtype))
+    k = jnp.einsum("bnd,nde->bne", xch, p["wk"].astype(x_t.dtype))
+    v = jnp.einsum("bnd,nde->bne", xm.reshape(B, nh, hd),
+                   p["wv"].astype(x_t.dtype))
+    i_pre, f_pre = jnp.split(xc @ p["w_if"]["w"].astype(x_t.dtype), 2, axis=-1)
+    f_pre = (f_pre + p["f_bias"][None, :]).astype(jnp.float32)
+    i_pre = i_pre.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_pre)                            # (B,nh)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    fs = jnp.exp(logf + state.m - m_new).astype(x_t.dtype)[..., None]
+    is_ = jnp.exp(i_pre - m_new).astype(x_t.dtype)[..., None]
+    C = fs[..., None] * state.C + is_[..., None] * v[..., :, None] * k[..., None, :]
+    n = fs * state.n + is_ * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q / math.sqrt(hd))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q / math.sqrt(hd))),
+                      jnp.exp(-m_new).astype(x_t.dtype))
+    y = (num / den[..., None]).reshape(B, di)
+    y = rmsnorm(p["norm"], y) * jax.nn.silu(z)
+    return y @ p["down"]["w"].astype(x_t.dtype), \
+        MLSTMState(C=C, n=n, m=m_new, conv=new_conv)
+
+
+# ------------------------------------------------------------------ sLSTM --
+class SLSTMState(NamedTuple):
+    c: jax.Array    # (B, nh, hd)
+    n: jax.Array    # (B, nh, hd)
+    h: jax.Array    # (B, nh, hd)
+    m: jax.Array    # (B, nh, hd)
+
+
+def _slstm_ffn_width(cfg: XLSTMCfg) -> int:
+    """×4/3 gated FFN, rounded up to a multiple of 64 (official xLSTM does
+    the same; also keeps the dim divisible by the 16-wide model axis)."""
+    raw = int(cfg.proj_factor_s * cfg.d_model)
+    return -(-raw // 64) * 64
+
+
+def slstm_init(rng: jax.Array, cfg: XLSTMCfg, dtype=jnp.float32) -> Dict[str, Any]:
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim_s
+    d_ff = _slstm_ffn_width(cfg)
+    ks = jax.random.split(rng, 6)
+    s = 1.0 / math.sqrt(hd)
+    return {
+        # input projections for gates z,i,f,o : (d, 4*d)
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),
+        # recurrent per-head block-diagonal: (4, nh, hd, hd)
+        "r": (jax.random.normal(ks[1], (4, nh, hd, hd)) * s).astype(dtype),
+        "b": jnp.zeros((4, d), dtype),
+        "gn": layernorm_init(d, dtype),
+        "ffn_gate": dense_init(ks[2], d, d_ff, dtype),
+        "ffn_up": dense_init(ks[3], d, d_ff, dtype),
+        "ffn_down": dense_init(ks[4], d_ff, d, dtype,
+                               scale=1.0 / math.sqrt(d_ff)),
+        "f_bias": jnp.full((nh, hd), 3.0, jnp.float32),
+    }
+
+
+def _slstm_cell(p, x_proj_t, state: SLSTMState, cfg: XLSTMCfg
+                ) -> Tuple[jax.Array, SLSTMState]:
+    """One sLSTM step.  x_proj_t: (B, 4, nh, hd) pre-activations from input."""
+    nh, hd = cfg.n_heads, cfg.head_dim_s
+    rec = jnp.einsum("bhd,ghde->bghe", state.h, p["r"].astype(state.h.dtype))
+    pre = x_proj_t + rec + p["b"].astype(x_proj_t.dtype).reshape(4, nh, hd)[None]
+    z_pre, i_pre, f_pre, o_pre = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logi = i_pre.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(
+        f_pre.astype(jnp.float32) + p["f_bias"][None])
+    m_new = jnp.maximum(logf + state.m, logi)
+    i_s = jnp.exp(logi - m_new).astype(z.dtype)
+    f_s = jnp.exp(logf + state.m - m_new).astype(z.dtype)
+    c = f_s * state.c + i_s * z
+    n = f_s * state.n + i_s
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return h, SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_seq(p, x: jax.Array, cfg: XLSTMCfg,
+              state: Optional[SLSTMState] = None
+              ) -> Tuple[jax.Array, SLSTMState]:
+    """Sequential sLSTM over (B, S, d); returns head outputs (B, S, d)."""
+    B, S, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim_s
+    xp = (x @ p["w_in"]["w"].astype(x.dtype)).reshape(B, S, 4, nh, hd)
+    if state is None:
+        state = slstm_state_init(cfg, B, x.dtype)
+
+    def step(st, xt):
+        h, st2 = _slstm_cell(p, xt, st, cfg)
+        return st2, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xp, 1, 0))
+    return jnp.moveaxis(hs, 0, 1).reshape(B, S, d), state
+
+
+def slstm_state_init(cfg: XLSTMCfg, batch: int, dtype=jnp.float32) -> SLSTMState:
+    nh, hd = cfg.n_heads, cfg.head_dim_s
+    z = jnp.zeros((batch, nh, hd), dtype)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((batch, nh, hd), -1e30,
+                                                jnp.float32))
+
+
+def slstm_block_ffn(p, y: jax.Array) -> jax.Array:
+    """Post-cell part of the sLSTM block: group-norm + gated FFN."""
+    y = layernorm(p["gn"], y)
+    h = jax.nn.gelu(y @ p["ffn_gate"]["w"].astype(y.dtype)) \
+        * (y @ p["ffn_up"]["w"].astype(y.dtype))
+    return h @ p["ffn_down"]["w"].astype(y.dtype)
+
+
+def slstm_block(p, x: jax.Array, cfg: XLSTMCfg) -> jax.Array:
+    """sLSTM block body: cell scan + group-norm + gated FFN."""
+    y, _ = slstm_seq(p, x, cfg)
+    return slstm_block_ffn(p, y)
+
+
+def slstm_decode_step(p, x_t: jax.Array, state: SLSTMState, cfg: XLSTMCfg
+                      ) -> Tuple[jax.Array, SLSTMState]:
+    B, d = x_t.shape
+    nh, hd = cfg.n_heads, cfg.head_dim_s
+    xp = (x_t @ p["w_in"]["w"].astype(x_t.dtype)).reshape(B, 4, nh, hd)
+    h, state = _slstm_cell(p, xp, state, cfg)
+    return slstm_block_ffn(p, h.reshape(B, d)), state
+
+
+def mlstm_flops(tokens: int, seq: int, cfg: XLSTMCfg) -> float:
+    d, di, nh, hd = cfg.d_model, cfg.d_inner_m, cfg.n_heads, cfg.head_dim_m
+    proj = 2.0 * tokens * d * 2 * di \
+        + 2.0 * tokens * (3 * nh * hd * hd + di * 2 * nh) \
+        + 2.0 * tokens * di * d
+    quad = 2.0 * 2.0 * tokens * seq * nh * hd
+    return proj + quad
+
+
+def slstm_flops(tokens: int, cfg: XLSTMCfg) -> float:
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim_s
+    d_ff = _slstm_ffn_width(cfg)
+    cell = 2.0 * tokens * d * 4 * d + 2.0 * tokens * 4 * nh * hd * hd
+    ffn = 2.0 * tokens * d * d_ff * 3
+    return cell + ffn

@@ -1,0 +1,2 @@
+from .optimizers import (OptState, adamw, sgd, adafactor, clip_by_global_norm,
+                         cosine_schedule, linear_warmup_cosine, Optimizer)

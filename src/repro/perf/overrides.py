@@ -1,0 +1,77 @@
+"""Named perf-iteration override sets (§Perf hillclimbing).
+
+Each entry bundles the knobs one hypothesis changes — parameter-sharding
+overrides, activation rules — so a dry-run can be re-lowered with
+``--overrides <name>`` and diffed against the baseline record.  The log of
+hypothesis → change → before/after lives in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from jax.sharding import PartitionSpec as P
+
+_SETS: Dict[str, Dict[str, Any]] = {}
+
+
+def register(name: str, **kw) -> None:
+    _SETS[name] = kw
+
+
+def get(name: Optional[str]) -> Optional[Dict[str, Any]]:
+    if name is None:
+        return None
+    return _SETS[name]
+
+
+def names():
+    return sorted(_SETS)
+
+
+# ---------------------------------------------------------------- H-sets ---
+# §Perf iteration knobs (EXPERIMENTS.md logs hypothesis + before/after).
+
+# H-seqpar: Megatron sequence parallelism — residual-stream activations
+# sharded over 'model' between blocks; row-matmul psums become
+# reduce-scatter + all-gather of S-sharded bf16 tensors.
+register("seqpar", rules={"act_seq": "model"})
+
+# H-ep: expert-parallel MoE dispatch — (E, C, d) buffers sharded over the
+# model axis; the scatter lowers to all-to-all and each shard computes only
+# its local experts.
+register("ep", rules={"expert_dispatch": "model"})
+
+# H-ep+seqpar combined.
+register("ep_seqpar", rules={"expert_dispatch": "model",
+                             "act_seq": "model"})
+
+# H-moe-w: stop FSDP-sharding the expert weights' CONTRACTION dims.  The
+# baseline's generic rule shards gate/up on d@data and down on f@data; the
+# (E,C,·) dispatch buffers have those dims unsharded, so every expert matmul
+# psums an (E,C,f)-sized partial over the data axis — measured 5.3 + 3.8 GiB
+# of all-reduce per deepseek layer.  Replicating the contraction dim trades
+# that for weight-sized gathers (~370 MB/layer, 14-25x cheaper).
+register("moe_w", param_overrides={
+    r".*moe/(?:gate|up)": P(
+        None, None, None, "model"),
+    r".*moe/down": P(
+        None, None, "model", None),
+})
+
+# H-seqpar-dots: after seqpar flips llama3 train to memory-bound, trade the
+# remat recompute traffic for saved matmul outputs (footprint headroom:
+# 12.7 GiB of 16 GiB).
+register("seqpar_dots", rules={"act_seq": "model"},
+         cfg={"remat_policy": "dots"})
+
+# H-moe-ragged: replace the capacity-dispatch einsum path with
+# sort + ragged_dot (exact active-token FLOPs; different GSPMD lowering).
+register("moe_ragged", cfg={"moe_impl": "ragged"})
+
+# H-moe-w + sequence parallelism on the attention side.
+register("moe_w_seqpar", rules={"act_seq": "model"}, param_overrides={
+    r".*moe/(?:gate|up)": P(
+        None, None, None, "model"),
+    r".*moe/down": P(
+        None, None, "model", None),
+})

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device — the 512-device dry-run flag must
+# NOT be set here (smoke tests and benches should see 1 device).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,74 @@
+"""Pallas Top-K kernels vs the pure-jnp oracle: shape/dtype/k sweeps in
+interpret mode (deliverable c — per-kernel allclose)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels import topk_compress as tk
+
+
+SHAPES = [(64,), (4096,), (5000,), (32, 257), (8, 128, 17), (3, 5, 7, 11)]
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16]
+RATIOS = [2, 10, 100]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("ratio", RATIOS)
+def test_blockwise_topk_exact_vs_oracle(shape, dtype, ratio):
+    rng = np.random.default_rng(hash((shape, ratio)) % 2**32)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+    n = int(np.prod(shape))
+    block = 512
+    kpb = max(1, (n // ratio) // max(1, -(-n // block)) or 1)
+    got = tk.blockwise_topk_mask(x, kpb, block=block, interpret=True)
+    want = ref.blockwise_topk_mask_ref(x, kpb, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(st.integers(8, 2000), st.integers(1, 64),
+       st.sampled_from([128, 256, 512]))
+@settings(max_examples=25, deadline=None)
+def test_kernel_oracle_property(n, k, block):
+    x = jnp.asarray(np.random.default_rng(n * 7 + k).standard_normal(n),
+                    jnp.float32)
+    got = tk.blockwise_topk_mask(x, k, block=block, interpret=True)
+    want = ref.blockwise_topk_mask_ref(x, k, block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_threshold_search_exact_at_duplicates():
+    x = jnp.asarray([1.0, -1.0, 1.0, 0.5, -0.25, 1.0, 0.0, 0.1], jnp.float32)
+    got = tk.blockwise_topk_mask(x, 2, block=8, interpret=True)
+    # threshold = 1.0; ties keep all three 1.0-magnitude entries
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray([1.0, -1.0, 1.0, 0, 0, 1.0, 0, 0],
+                                    dtype=np.float32))
+
+
+def test_ef_topk_fused_matches_reference():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal(3000), jnp.float32)
+    r = jnp.asarray(rng.standard_normal(3000) * 0.1, jnp.float32)
+    s1, nr1 = tk.ef_topk(x, r, 8, block=512, interpret=True)
+    s2, nr2 = ref.ef_topk_ref(x, r, 8, block=512)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_allclose(np.asarray(nr1), np.asarray(nr2), atol=1e-6)
+
+
+def test_jit_wrappers():
+    x = jnp.asarray(np.random.default_rng(4).standard_normal(2048),
+                    jnp.float32)
+    y = ops.topk_mask(x, 100)
+    assert 100 <= int(np.sum(np.asarray(y) != 0)) <= 120
+    y2 = ops.blockwise_topk_mask(x, 16, block=256)
+    assert int(np.sum(np.asarray(y2) != 0)) == 16 * 8
+
+
+def test_zero_input_keeps_everything_zero():
+    x = jnp.zeros(1024, jnp.float32)
+    y = tk.blockwise_topk_mask(x, 4, block=256, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros(1024))

@@ -1,0 +1,176 @@
+"""Model-component oracles: chunked SSD vs literal recurrence, mLSTM
+parallel vs recurrent, sLSTM scan vs stepping, MoE path equivalence,
+attention masks/caches, analytic param counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, resolve
+from repro.models import attention as attn
+from repro.models import causal_lm, encdec, moe as moe_mod, ssm, xlstm as xl
+
+
+class TestSSD:
+    def _inputs(self, B=2, S=32, nh=3, hd=8, ds=5, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        return (jax.random.normal(ks[0], (B, S, nh, hd)),
+                jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))),
+                -jnp.exp(jax.random.normal(ks[2], (nh,))),
+                jax.random.normal(ks[3], (B, S, ds)),
+                jax.random.normal(ks[4], (B, S, ds)),
+                jax.random.normal(ks[5], (nh,)))
+
+    @pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+    def test_chunked_equals_reference(self, chunk):
+        x, dt, A, Bm, Cm, D = self._inputs()
+        y_ref = ssm.ssd_reference(x, dt, A, Bm, Cm, D)
+        y, _ = ssm.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4)
+
+    def test_chunk_must_divide(self):
+        x, dt, A, Bm, Cm, D = self._inputs(S=30)
+        with pytest.raises(ValueError):
+            ssm.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=8)
+
+    def test_state_continuation(self):
+        """ssd(x, h0=state_after_prefix) == suffix of ssd(full)."""
+        x, dt, A, Bm, Cm, D = self._inputs(S=32)
+        y_full, h_full = ssm.ssd_chunked(x, dt, A, Bm, Cm, D, chunk=8)
+        _, h_pre = ssm.ssd_chunked(x[:, :16], dt[:, :16], A, Bm[:, :16],
+                                   Cm[:, :16], D, chunk=8)
+        y_suf, h_end = ssm.ssd_chunked(x[:, 16:], dt[:, 16:], A, Bm[:, 16:],
+                                       Cm[:, 16:], D, chunk=8, h0=h_pre)
+        np.testing.assert_allclose(np.asarray(y_suf),
+                                   np.asarray(y_full[:, 16:]), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(h_end), np.asarray(h_full),
+                                   atol=1e-4)
+
+
+class TestMambaBlock:
+    def test_prefill_then_decode_matches_train(self):
+        mc = ssm.MambaCfg(d_model=16, d_inner=32, n_heads=4, head_dim=8,
+                          d_state=5, chunk=4)
+        p = ssm.mamba_init(jax.random.PRNGKey(1), mc)
+        x = jax.random.normal(jax.random.PRNGKey(2), (2, 12, 16))
+        y_full = ssm.mamba_train(p, x, mc)
+        y_pre, st = ssm.mamba_prefill(p, x[:, :8], mc)
+        np.testing.assert_allclose(np.asarray(y_pre),
+                                   np.asarray(y_full[:, :8]), atol=1e-5)
+        for t in range(8, 12):
+            y_t, st = ssm.mamba_decode_step(p, x[:, t], st, mc)
+            np.testing.assert_allclose(np.asarray(y_t),
+                                       np.asarray(y_full[:, t]), atol=1e-4)
+
+
+class TestXLSTM:
+    def setup_method(self):
+        self.cfg = xl.XLSTMCfg(d_model=16, n_heads=2)
+
+    def test_mlstm_parallel_vs_recurrent(self):
+        p = xl.mlstm_init(jax.random.PRNGKey(3), self.cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (2, 10, 16)) * 0.5
+        y_par = xl.mlstm_block(p, x, self.cfg)
+        y_pre, st = xl.mlstm_prefill(p, x[:, :6], self.cfg)
+        np.testing.assert_allclose(np.asarray(y_pre),
+                                   np.asarray(y_par[:, :6]), atol=1e-5)
+        for t in range(6, 10):
+            y_t, st = xl.mlstm_decode_step(p, x[:, t], st, self.cfg)
+            np.testing.assert_allclose(np.asarray(y_t),
+                                       np.asarray(y_par[:, t]), atol=1e-4)
+
+    def test_slstm_scan_vs_stepping(self):
+        p = xl.slstm_init(jax.random.PRNGKey(5), self.cfg)
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 10, 16)) * 0.5
+        y_blk = xl.slstm_block(p, x, self.cfg)
+        st = xl.slstm_state_init(self.cfg, 2)
+        outs = []
+        for t in range(10):
+            o, st = xl.slstm_decode_step(p, x[:, t], st, self.cfg)
+            outs.append(o)
+        np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                                   np.asarray(y_blk), atol=1e-5)
+
+    def test_slstm_ffn_width_rounded_for_sharding(self):
+        p = xl.slstm_init(jax.random.PRNGKey(7),
+                          xl.XLSTMCfg(d_model=2048, n_heads=4))
+        assert p["ffn_up"]["w"].shape[1] % 64 == 0
+
+
+class TestMoE:
+    def setup_method(self):
+        self.p = moe_mod.moe_init(jax.random.PRNGKey(8), 16, 32,
+                                  n_experts=4, n_shared=1)
+        self.x = jax.random.normal(jax.random.PRNGKey(9), (2, 8, 16))
+
+    def test_three_paths_agree(self):
+        o1 = moe_mod.moe_loop(self.p, self.x, 2)
+        o2 = moe_mod.moe_ragged(self.p, self.x, 2)
+        o3 = moe_mod.moe_capacity(self.p, self.x, 2, capacity=16)
+        np.testing.assert_allclose(np.asarray(o1.y), np.asarray(o2.y),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(o1.y), np.asarray(o3.y),
+                                   atol=1e-5)
+        assert float(o1.aux_loss) == pytest.approx(float(o2.aux_loss))
+
+    def test_capacity_drops_tokens(self):
+        full = moe_mod.moe_capacity(self.p, self.x, 2, capacity=16)
+        tight = moe_mod.moe_capacity(self.p, self.x, 2, capacity=1)
+        assert not np.allclose(np.asarray(full.y), np.asarray(tight.y))
+
+    def test_router_gates_normalized(self):
+        gates, idx, aux = moe_mod.route(self.p["router"],
+                                        self.x.reshape(-1, 16), 2)
+        np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, atol=1e-5)
+        assert float(aux) >= 1.0 - 1e-5  # E * Σ f_e p_e >= 1 (Cauchy-Schwarz)
+
+
+class TestAttention:
+    def test_sliding_window_masks_far_tokens(self):
+        p = attn.attn_init(jax.random.PRNGKey(10), 16, 2, 2, 8)
+        x = jax.random.normal(jax.random.PRNGKey(11), (1, 12, 16))
+        y_full = attn.attn_train(p, x, n_heads=2, n_kv=2, head_dim=8)
+        y_win = attn.attn_train(p, x, n_heads=2, n_kv=2, head_dim=8, window=4)
+        # early positions agree (window covers their whole history)
+        np.testing.assert_allclose(np.asarray(y_win[:, :4]),
+                                   np.asarray(y_full[:, :4]), atol=1e-5)
+        assert not np.allclose(np.asarray(y_win[:, -1]),
+                               np.asarray(y_full[:, -1]))
+
+    def test_gqa_equals_mha_when_heads_repeat(self):
+        """GQA grouped einsum == expanded-KV reference."""
+        B, S, H, hkv, hd = 2, 6, 4, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(12), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, hkv, hd))
+        v = jax.random.normal(ks[2], (B, S, hkv, hd))
+        mask = attn.make_mask(S, S, True, None)
+        got = attn.sdpa(q, k, v, mask)
+        want = attn.sdpa(q, jnp.repeat(k, H // hkv, 2),
+                         jnp.repeat(v, H // hkv, 2), mask)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_count_analytic_matches_init(arch_id):
+    cfg = resolve(arch_id).smoke
+    mod = encdec if cfg.family == "encdec" else causal_lm
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    real = sum(int(np.prod(np.shape(l)))
+               for l in jax.tree_util.tree_leaves(params))
+    assert real == mod.count_params(cfg)
+
+
+def test_full_config_param_counts_plausible():
+    """Analytic N roughly matches the models' nominal sizes."""
+    # xlstm: the assigned (48L, d=2048, 4H) with standard xLSTM block shapes
+    # lands at ~2.0B — the "1.3b" card uses different internal ratios; the
+    # assignment pins L/d/H, so we pin the derived count (DESIGN.md §5).
+    approx = {"llama3-8b": 8.0e9, "mistral-nemo-12b": 12.2e9,
+              "mixtral-8x7b": 46.7e9, "granite-3-8b": 8.2e9,
+              "xlstm-1_3b": 2.0e9}
+    for aid, n in approx.items():
+        got = causal_lm.count_params(resolve(aid).full)
+        assert 0.7 * n < got < 1.45 * n, (aid, got)

@@ -1,0 +1,92 @@
+"""OP-DAG IR: structure, shapes, Table-2/3 semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.opgraph import (OpGraph, OpNode, OpType, build_subdags, chain)
+
+
+def paper_fig3_graph():
+    """The exact example DAG of paper Fig. 3 / Tables 2–3:
+    Input->Conv->Add<-ReLU<-TensorA; Add->Linear->CE<-Label."""
+    g = OpGraph("fig3")
+    g.add(OpNode("Input", OpType.PLACEHOLDER))
+    g.add(OpNode("Conv", OpType.PARAMETRIC, args=("Input",),
+                 init_fn=lambda r, s: {"w": jnp.ones((4, 4))},
+                 apply_fn=lambda p, x: x @ p["w"],
+                 out_shape_fn=lambda s: (s[0], 4),
+                 flops_fn=lambda s: 2 * s[0] * 4 * 4))
+    g.add(OpNode("TensorA", OpType.VARIABLE, meta={"shape": (2, 4)}))
+    g.add(OpNode("ReLu", OpType.NON_PARAMETRIC, args=("TensorA",),
+                 apply_fn=lambda p, x: jax.nn.relu(x)))
+    g.add(OpNode("Add", OpType.NON_PARAMETRIC, args=("ReLu", "Conv"),
+                 apply_fn=lambda p, a, b: a + b,
+                 out_shape_fn=lambda a, b: a))
+    g.add(OpNode("Linear", OpType.PARAMETRIC, args=("Add",),
+                 init_fn=lambda r, s: {"w": jnp.ones((4, 3))},
+                 apply_fn=lambda p, x: x @ p["w"],
+                 out_shape_fn=lambda s: (s[0], 3)))
+    g.add(OpNode("Label", OpType.PLACEHOLDER))
+    g.add(OpNode("CE", OpType.LOSS, args=("Linear", "Label"),
+                 apply_fn=lambda p, x, y: jnp.mean((x - y) ** 2),
+                 out_shape_fn=lambda a, b: ()))
+    return g
+
+
+def test_topo_order_and_users():
+    g = paper_fig3_graph()
+    order = g.topo_order()
+    assert order.index("Conv") < order.index("Add") < order.index("CE")
+    assert g.users["Conv"] == ["Add"]
+    assert set(g.users["Add"]) == {"Linear"}
+
+
+def test_cycle_detection():
+    g = OpGraph()
+    g.add(OpNode("a", OpType.PLACEHOLDER))
+    g.add(OpNode("b", OpType.NON_PARAMETRIC, args=("a",)))
+    g.nodes["a"].__dict__["args"] = ("b",)  # forge a cycle
+    with pytest.raises(ValueError, match="cycle"):
+        g.topo_order()
+
+
+def test_shape_inference_and_profiles():
+    g = paper_fig3_graph()
+    shapes = g.infer_shapes({"Input": (2, 4), "Label": (2, 3)})
+    assert shapes["Conv"] == (2, 4)
+    assert shapes["Linear"] == (2, 3)
+    prof = g.annotate({"Input": (2, 4), "Label": (2, 3)})
+    assert prof["Conv"].fwd_flops == 2 * 2 * 4 * 4
+    assert prof["Linear"].out_bytes == 2 * 3 * 4
+
+
+def test_subdags_match_paper_table3():
+    """Paper Table 3: CompNode1={Input,Conv}, 2={TensorA,ReLu},
+    3={Label,Add,Linear,CE}."""
+    g = paper_fig3_graph()
+    sds = build_subdags(g, [["Input", "Conv"], ["TensorA", "ReLu"],
+                            ["Label", "Add", "Linear", "CE"]])
+    assert sds[0].send_acti == ["Conv"] and sds[0].required_acti == []
+    assert sds[0].required_grad == [("Conv", "Add")]
+    assert sds[1].send_acti == ["ReLu"]
+    assert sds[1].required_grad == [("ReLu", "Add")]
+    assert set(sds[2].required_acti) == {"Conv", "ReLu"}
+    assert set(sds[2].send_grad) == {("Conv", "Add"), ("ReLu", "Add")}
+    assert sds[2].send_acti == []
+
+
+def test_apply_executes_full_graph():
+    g = paper_fig3_graph()
+    params = g.init(jax.random.PRNGKey(0),
+                    {"Input": (2, 4), "Label": (2, 3)})
+    vals = g.apply(params, {"Input": jnp.ones((2, 4)),
+                            "Label": jnp.zeros((2, 3))},
+                   variables={"TensorA": jnp.ones((2, 4))})
+    assert vals["CE"].shape == ()
+    assert np.isfinite(float(vals["CE"]))
+
+
+def test_max_degree_small_for_chain():
+    g = paper_fig3_graph()
+    assert g.max_degree() <= 2  # paper Observation 1

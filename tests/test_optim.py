@@ -1,0 +1,64 @@
+"""Optimizers descend; schedules and clipping behave."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, clip_by_global_norm,
+                         cosine_schedule, linear_warmup_cosine, sgd)
+
+
+def quad_problem(d=8, seed=0):
+    A = jax.random.normal(jax.random.PRNGKey(seed), (d, d)) * 0.3
+    A = A @ A.T + jnp.eye(d)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,))
+
+    def loss(p):
+        x = p["x"]
+        return 0.5 * x @ A @ x - b @ x
+
+    return loss, {"x": jnp.zeros(d)}
+
+
+@pytest.mark.parametrize("opt", [sgd(5e-2, momentum=0.9),
+                                 adamw(5e-2, weight_decay=0.0),
+                                 adafactor(5e-1)])
+def test_optimizers_descend(opt):
+    loss, params = quad_problem()
+    state = opt.init(params)
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < l0 - 0.1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0, "b": jnp.ones(2) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(10 * np.sqrt(6), rel=1e-5)
+    total = np.sqrt(sum(float(jnp.sum(v ** 2)) for v in clipped.values()))
+    assert total == pytest.approx(1.0, rel=1e-4)
+    # no-op when under the bound
+    small, _ = clip_by_global_norm({"a": jnp.ones(2) * 0.1}, 1.0)
+    np.testing.assert_allclose(np.asarray(small["a"]), 0.1, rtol=1e-6)
+
+
+def test_schedules():
+    cos = cosine_schedule(1.0, 100, final_frac=0.1)
+    assert float(cos(jnp.int32(0))) == pytest.approx(1.0)
+    assert float(cos(jnp.int32(100))) == pytest.approx(0.1)
+    wc = linear_warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(wc(jnp.int32(0))) == pytest.approx(0.1)
+    assert float(wc(jnp.int32(9))) == pytest.approx(1.0)
+    assert float(wc(jnp.int32(110))) < 0.2
+
+
+def test_adamw_state_dtype_fp32_even_for_bf16_params():
+    opt = adamw(1e-3)
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state.inner["m"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_p, state = opt.update(grads, state, params)
+    assert new_p["w"].dtype == jnp.bfloat16

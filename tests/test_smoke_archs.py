@@ -1,0 +1,129 @@
+"""REQUIRED per-architecture smoke tests (deliverable f): reduced same-family
+variant (≤2–4 layers, d_model ≤ 512, ≤4 experts) runs one forward/train step
+on CPU; output shapes + no NaNs.  Full configs are exercised only by the
+dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, resolve
+from repro.models import causal_lm, encdec
+from repro.optim import adamw
+
+B, S = 2, 16
+
+
+def _batch(cfg, rng):
+    if cfg.family == "encdec":
+        return {"src_embeds": jax.random.normal(rng, (B, 8, cfg.d_frontend)),
+                "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+                "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    if cfg.n_prefix:
+        batch["prefix_embeds"] = jax.random.normal(
+            rng, (B, cfg.n_prefix, cfg.d_frontend))
+    return batch
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_reduced_variant_limits(arch_id):
+    cfg = resolve(arch_id).smoke
+    assert cfg.n_layers <= 4 and cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.family == resolve(arch_id).full.family
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch_id):
+    cfg = resolve(arch_id).smoke
+    rng = jax.random.PRNGKey(0)
+    mod = encdec if cfg.family == "encdec" else causal_lm
+    params = mod.init(cfg, rng)
+    batch = _batch(cfg, rng)
+    if cfg.family == "encdec":
+        memory = encdec.encode(cfg, params, batch["src_embeds"])
+        assert memory.shape == (B, 8, cfg.d_model)
+        loss, metrics = encdec.train_loss(cfg, params, batch)
+    else:
+        logits, aux = causal_lm.forward(cfg, params, batch["tokens"],
+                                        batch.get("prefix_embeds"))
+        assert logits.shape == (B, S + cfg.n_prefix, cfg.vocab_padded)
+        assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab])))
+        loss, metrics = causal_lm.train_loss(cfg, params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_smoke_one_train_step_improves_or_moves(arch_id):
+    cfg = resolve(arch_id).smoke
+    rng = jax.random.PRNGKey(1)
+    mod = encdec if cfg.family == "encdec" else causal_lm
+    params = mod.init(cfg, rng)
+    batch = _batch(cfg, rng)
+    opt = adamw(1e-3, weight_decay=0.0)
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return mod.train_loss(cfg, p, batch)[0]
+
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in
+             jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(float(l0)) and gn > 0
+    new_params, _ = opt.update(grads, state, params)
+    l1 = loss_fn(new_params)
+    assert np.isfinite(float(l1))
+    assert float(l1) < float(l0)  # one AdamW step on the same batch descends
+
+
+@pytest.mark.parametrize("arch_id", [a for a in ARCH_IDS
+                                     if a != "seamless-m4t-large-v2"])
+def test_smoke_decode_matches_forward(arch_id):
+    """serve path: prefill 8 tokens then decode 1 == teacher-forced
+    forward at that position."""
+    cfg = resolve(arch_id).smoke
+    rng = jax.random.PRNGKey(2)
+    params = causal_lm.init(cfg, rng)
+    batch = _batch(cfg, rng)
+    logits_full, _ = causal_lm.forward(cfg, params, batch["tokens"],
+                                       batch.get("prefix_embeds"))
+    lg, cache = causal_lm.prefill(
+        cfg, params, batch["tokens"][:, :8],
+        cache_len=S + cfg.n_prefix + 8,
+        prefix_embeds=batch.get("prefix_embeds"))
+    lg2, cache = causal_lm.decode_step(cfg, params, cache,
+                                       batch["tokens"][:, 8:9])
+    np.testing.assert_allclose(
+        np.asarray(lg[:, -1], np.float32),
+        np.asarray(logits_full[:, cfg.n_prefix + 7], np.float32), atol=2e-2)
+    np.testing.assert_allclose(
+        np.asarray(lg2[:, 0], np.float32),
+        np.asarray(logits_full[:, cfg.n_prefix + 8], np.float32), atol=2e-2)
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyper-parameters."""
+    expect = {
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "xlstm-1_3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for aid, (L, d, H, kv, ff, V) in expect.items():
+        cfg = resolve(aid).full
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab) == (L, d, H, kv, ff, V), aid
+    assert resolve("zamba2-7b").full.ssm_state == 64
+    assert resolve("deepseek-moe-16b").full.n_experts == 64
+    assert resolve("deepseek-moe-16b").full.top_k == 6
+    assert resolve("deepseek-moe-16b").full.n_shared_experts == 2
+    assert resolve("mixtral-8x7b").full.n_experts == 8
+    assert resolve("mixtral-8x7b").full.top_k == 2

@@ -1,0 +1,98 @@
+"""Eq. 2–4 throughput model + discrete-event simulator invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (NodeLoad, estimate_iteration, latency_pipelined,
+                        latency_single_pass, network, plan_adatopk,
+                        plan_uniform, schedule_equal_compute,
+                        simulate_iteration, throughput)
+from helpers import mlp_chain
+
+
+loads_st = st.lists(
+    st.tuples(st.floats(1e-6, 10.0), st.floats(0.0, 10.0)).map(
+        lambda t: NodeLoad(comp=t[0], recv=t[1])),
+    min_size=1, max_size=8)
+
+
+@given(loads_st)
+def test_eq3_reduces_to_eq2_at_one_microbatch(loads):
+    assert latency_pipelined(loads, 1) == pytest.approx(
+        latency_single_pass(loads))
+
+
+@given(loads_st, st.integers(1, 16))
+def test_eq3_monotone_in_microbatches(loads, nb):
+    assert latency_pipelined(loads, nb + 1) >= latency_pipelined(loads, nb)
+
+
+@given(loads_st, st.integers(1, 16))
+def test_eq3_linear_extrapolation(loads, nb):
+    """T(n_b) = T(1) + (n_b-1)·max_p max(C_p,R_p) exactly."""
+    pace = max(l.bottleneck for l in loads)
+    assert latency_pipelined(loads, nb) == pytest.approx(
+        latency_single_pass(loads) + (nb - 1) * pace)
+
+
+@given(loads_st, st.integers(1, 8), st.integers(1, 512))
+def test_throughput_eq4(loads, nb, bs):
+    phi = throughput(loads, nb, bs)
+    assert phi == pytest.approx(bs / latency_pipelined(loads, nb))
+
+
+class TestSimulator:
+    def setup_method(self):
+        g, shapes, params, inputs = mlp_chain(n_layers=12, d=128, batch=16)
+        self.g, self.prof = g, g.annotate(shapes)
+        self.cluster = network.paper_testbed(1, seed=0)
+        self.sch = schedule_equal_compute(self.g, self.prof, self.cluster)
+
+    def test_sim_time_monotone_in_microbatches(self):
+        t = [simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                n_micro=n).iteration_time for n in (1, 2, 4)]
+        assert t[0] <= t[1] <= t[2]
+
+    def test_pipelining_overlaps(self):
+        """4 micro-batches cost < 4x one micro-batch (overlap exists)."""
+        t1 = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                n_micro=1).iteration_time
+        t4 = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                n_micro=4).iteration_time
+        assert t4 < 4 * t1
+
+    def test_compression_reduces_time_and_bytes(self):
+        dense = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                   n_micro=4)
+        plan = plan_uniform(self.g, self.sch.placement, ratio=100)
+        comp = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                  plan, n_micro=4)
+        assert comp.comm_bytes < dense.comm_bytes
+        assert comp.iteration_time <= dense.iteration_time
+
+    def test_adatopk_comparable_to_uniform_and_beats_dense(self):
+        """Paper Fig. 10: both compressors beat dense; uniform and adaptive
+        land close (uniform compresses every link at r, adaptive hits only
+        the slow links but at 3r — either can edge out the other depending
+        on where the pipeline bottleneck sits)."""
+        plan_u = plan_uniform(self.g, self.sch.placement, ratio=100)
+        plan_a = plan_adatopk(self.g, self.prof, self.cluster,
+                              self.sch.placement, ratio=100)
+        t_d = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                 n_micro=4).iteration_time
+        t_u = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                 plan_u, n_micro=4).iteration_time
+        t_a = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                 plan_a, n_micro=4).iteration_time
+        assert t_u < t_d and t_a < t_d
+        assert abs(t_u - t_a) < 0.15 * t_d
+
+    def test_estimator_consistent_with_simulator(self):
+        """Eq. 3 closed form and the event simulator agree within 2x (the
+        estimator ignores per-link queuing the simulator models)."""
+        est = estimate_iteration(self.g, self.prof, self.cluster,
+                                 self.sch.placement, n_micro=4, batch_size=16)
+        sim = simulate_iteration(self.g, self.prof, self.sch, self.cluster,
+                                 n_micro=4)
+        ratio = est.iteration_time / sim.iteration_time
+        assert 0.3 < ratio < 3.0
