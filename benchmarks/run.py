@@ -23,11 +23,12 @@ def main() -> None:
                     help="convergence steps (Fig. 8)")
     args = ap.parse_args()
 
-    from . import (ablation_microbatch, convergence, gpu_table,
+    from . import (ablation_microbatch, churn, convergence, gpu_table,
                    kernel_bench, latency, ratio_sweep, roofline_table,
                    speedup_table)
 
     benches = {
+        "churn_elastic": lambda: churn.run(csv_writer),
         "table1_gpu": lambda: gpu_table.run(csv_writer),
         "fig8_convergence": lambda: convergence.run(csv_writer,
                                                     steps=args.steps),

@@ -1,1 +1,2 @@
-from .checkpoint import save_checkpoint, load_checkpoint, latest_checkpoint
+from .checkpoint import (save_checkpoint, load_checkpoint, latest_checkpoint,
+                         serialize_state, deserialize_state)

@@ -7,6 +7,7 @@ sub-DAG's parameters (paper §3.3 Update).
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import re
@@ -52,31 +53,58 @@ def save_checkpoint(directory: str, step: int, params: Any,
     return path
 
 
+def _restore(data: Any, template: Any, prefix: str) -> Any:
+    """Rebuild a pytree from flattened-path arrays (shape/dtype-checked)."""
+    flat_t = _flatten(template)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    keys = list(flat_t.keys())
+    assert len(keys) == len(leaves)
+    new = []
+    for k, leaf in zip(keys, leaves):
+        arr = data[f"{prefix}/{k}"]
+        if arr.shape != tuple(np.shape(leaf)):
+            raise ValueError(f"ckpt leaf {k}: shape {arr.shape} vs "
+                             f"template {np.shape(leaf)}")
+        # jnp handles ml_dtypes targets (bf16) that numpy cannot cast to
+        new.append(jnp.asarray(arr).astype(jnp.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, new)
+
+
 def load_checkpoint(path: str, params_template: Any,
                     opt_template: Any = None) -> Tuple[Any, Any, Dict]:
     """Restore into the structure of the provided templates (shape-checked)."""
     data = np.load(path)
     meta_path = path.replace(".npz", ".json")
     meta = json.load(open(meta_path)) if os.path.exists(meta_path) else {}
-
-    def restore(template, prefix):
-        flat_t = _flatten(template)
-        leaves, treedef = jax.tree_util.tree_flatten(template)
-        keys = list(flat_t.keys())
-        assert len(keys) == len(leaves)
-        new = []
-        for k, leaf in zip(keys, leaves):
-            arr = data[f"{prefix}/{k}"]
-            if arr.shape != tuple(np.shape(leaf)):
-                raise ValueError(f"ckpt leaf {k}: shape {arr.shape} vs "
-                                 f"template {np.shape(leaf)}")
-            # jnp handles ml_dtypes targets (bf16) that numpy cannot cast to
-            new.append(jnp.asarray(arr).astype(jnp.asarray(leaf).dtype))
-        return jax.tree_util.tree_unflatten(treedef, new)
-
-    params = restore(params_template, "params")
-    opt = restore(opt_template, "opt") if opt_template is not None else None
+    params = _restore(data, params_template, "params")
+    opt = _restore(data, opt_template, "opt") if opt_template is not None \
+        else None
     return params, opt, meta
+
+
+def serialize_state(params: Any, opt_state: Any = None) -> bytes:
+    """Pack (params, opt_state) into .npz bytes — the same wire format as
+    on-disk checkpoints, held in memory.  The elastic runtime ships migrated
+    sub-trees between CompNodes in this envelope, so a migration exercises
+    the identical flatten/cast path as a checkpoint round-trip (bit-exact,
+    tested)."""
+    payload = {f"params/{k}": v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        payload.update({f"opt/{k}": v
+                        for k, v in _flatten(opt_state).items()})
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    return buf.getvalue()
+
+
+def deserialize_state(blob: bytes, params_template: Any,
+                      opt_template: Any = None) -> Tuple[Any, Any]:
+    """Inverse of :func:`serialize_state` (structure comes from templates)."""
+    data = np.load(io.BytesIO(blob))
+    params = _restore(data, params_template, "params")
+    opt = _restore(data, opt_template, "opt") if opt_template is not None \
+        else None
+    return params, opt
 
 
 def latest_checkpoint(directory: str) -> Optional[str]:

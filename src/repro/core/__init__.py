@@ -2,7 +2,8 @@
 from .opgraph import (OpData, OpGraph, OpNode, OpProfile, OpType, SubDag,
                       build_subdags)
 from .estimator import (ClusterSpec, DeviceSpec, LinkSpec, make_device,
-                        fit_alpha_beta, fit_lambda, estimate_op_costs)
+                        fit_alpha_beta, fit_lambda, estimate_op_costs,
+                        predict_step_times)
 from .throughput import (IterationEstimate, NodeLoad, estimate_iteration,
                          latency_pipelined, latency_single_pass, node_loads,
                          throughput)
@@ -18,5 +19,7 @@ from .compression import (CompressionPlan, adaptive_ratios, boundary_compress,
 from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
                   pipeline_loss_and_grad_ef, pipeline_train_step,
                   single_device_loss_and_grad)
-from .executor import DecentralizedRuntime, SimResult, simulate_iteration
+from .executor import (DecentralizedRuntime, MigrationSim, SimResult,
+                       pipeline_fill_seconds, simulate_iteration,
+                       simulate_migration)
 from . import network

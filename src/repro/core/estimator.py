@@ -110,6 +110,17 @@ class ClusterSpec:
         """C(f,p) = FLOPs(f) / S(p)."""
         return flops / self.devices[p].speed
 
+    def links(self) -> Dict[Tuple[int, int], LinkSpec]:
+        """Copy of the directed link table (topology transforms use this)."""
+        return dict(self._links)
+
+    def with_devices(self, devices: Sequence[DeviceSpec]) -> "ClusterSpec":
+        """Same topology, replaced device sheets (elastic runtime: degraded
+        λ_p for stragglers, restored λ_p on recovery)."""
+        if len(devices) != len(self.devices):
+            raise ValueError("device count must match the topology")
+        return ClusterSpec(devices, self._links)
+
 
 def fit_lambda(measured_flops_per_s: float, peak_flops: float) -> float:
     """Regression-based scaling-down factor λ_p = S(p)/S*(p) (paper cites
@@ -199,3 +210,27 @@ def estimate_op_costs(graph: OpGraph,
         costs[n] = OpCost(name=n, comp_time=comp, recv_time=recv,
                           recv_bytes=recv_bytes, send_bytes=send_bytes)
     return costs
+
+
+def predict_step_times(graph: OpGraph,
+                       profiles: Mapping[str, OpProfile],
+                       cluster: ClusterSpec,
+                       placement: Mapping[str, int],
+                       compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
+                       ) -> Dict[int, float]:
+    """Per-CompNode predicted FP+BP seconds for one micro-batch.
+
+    Sums Eq. (1) over each CompNode's assigned ops, forward and backward.
+    This is the reference the elastic straggler detector compares observed
+    per-stage step times against: a healthy node tracks its prediction, a
+    degraded one drifts above it.
+    """
+    fwd = estimate_op_costs(graph, profiles, cluster, placement,
+                            compress_ratio, backward=False)
+    bwd = estimate_op_costs(graph, profiles, cluster, placement,
+                            compress_ratio, backward=True)
+    out: Dict[int, float] = {}
+    for n in graph.nodes:
+        p = placement[n]
+        out[p] = out.get(p, 0.0) + fwd[n].total + bwd[n].total
+    return out

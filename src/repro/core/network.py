@@ -130,6 +130,38 @@ def geo_random(n: int = 16, n_sites: int = 4, seed: int = 0) -> ClusterSpec:
     return ClusterSpec(devices, links)
 
 
+# ------------------------------------------------- churn-trace transforms --
+def with_slowdowns(cluster: ClusterSpec,
+                   factors: Dict[int, float]) -> ClusterSpec:
+    """Degraded view of a topology: device i's effective speed is scaled by
+    ``factors[i]`` (0 < f ≤ 1; thermal throttling, contention, preemption).
+
+    The elastic runtime uses this twice: the *ground-truth* cluster that a
+    scripted ``slowdown`` churn event produces, and the *believed* cluster
+    the broker re-plans on once the straggler detector has flagged the node.
+    """
+    devices = []
+    for i, d in enumerate(cluster.devices):
+        f = float(factors.get(i, 1.0))
+        if f <= 0.0:
+            raise ValueError(f"slowdown factor for device {i} must be > 0")
+        devices.append(dataclasses.replace(d, lam=d.lam * f))
+    return cluster.with_devices(devices)
+
+
+def with_link_slowdowns(cluster: ClusterSpec,
+                        factors: Dict[int, float]) -> ClusterSpec:
+    """Degraded links: every link touching device i gets its bandwidth scaled
+    by ``factors[i]`` (congestion on the node's uplink).  α is unchanged."""
+    links = {}
+    for (i, j), lk in cluster.links().items():
+        f = float(factors.get(i, 1.0)) * float(factors.get(j, 1.0))
+        if f <= 0.0:
+            raise ValueError("link slowdown factors must be > 0")
+        links[(i, j)] = LinkSpec(alpha=lk.alpha, beta=lk.beta / f)
+    return ClusterSpec(list(cluster.devices), links)
+
+
 def tpu_two_pods(chips_per_pod: int = 4, ici_GBps: float = 50.0,
                  dci_GBps: float = 5.0) -> ClusterSpec:
     """TPU adaptation of the geo hierarchy: two pod slices, fast ICI inside,

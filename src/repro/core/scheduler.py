@@ -207,15 +207,32 @@ def _order_clusters(clusters: List[List[int]], bw: np.ndarray) -> List[int]:
 def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
                      cluster: ClusterSpec, seed: int = 0,
                      edge_bytes_scale: Optional[Mapping[int, float]] = None,
+                     device_subset: Optional[Sequence[int]] = None,
                      ) -> Schedule:
     """The OP-Fence scheduler.
 
     ``edge_bytes_scale`` (stage-index -> scale) lets the broker re-schedule
     under a compression plan (AdaTopK shrinks the slowest edges, which can
     change the optimal split).
+
+    ``device_subset`` restricts placement to the listed CompNodes (the elastic
+    runtime re-plans on the survivors after churn); the returned Schedule
+    still spans the full device index space, with excluded CompNodes empty.
     """
     bw = cluster.bandwidth_matrix()
-    clusters = louvain_communities(bw, seed=seed)
+    if device_subset is None:
+        subset = list(range(len(cluster)))
+    else:
+        subset = sorted(set(int(d) for d in device_subset))
+        if not subset:
+            raise ValueError("device_subset must name at least one CompNode")
+        if subset[0] < 0 or subset[-1] >= len(cluster):
+            raise ValueError("device_subset out of range")
+    # Louvain on the surviving sub-graph, communities mapped back to the
+    # original CompNode indices so link lookups stay in the full topology.
+    sub_bw = bw[np.ix_(subset, subset)]
+    clusters = [[subset[i] for i in c]
+                for c in louvain_communities(sub_bw, seed=seed)]
     order = _order_clusters(clusters, bw)
     # Device pipeline order: clusters in path order; inside a cluster, fastest
     # devices first (they will absorb the bigger DP segments).

@@ -115,7 +115,8 @@ def batch_spec(global_batch: int, mesh: Mesh) -> P:
     axes = [a for a in ("pod", "data") if a in mesh.axis_names]
     size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
     if axes and global_batch % size == 0 and global_batch >= size:
-        return P(tuple(axes))
+        # single axis: scalar form, so the spec compares equal to P("data")
+        return P(axes[0] if len(axes) == 1 else tuple(axes))
     if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0 \
             and global_batch >= mesh.shape["data"]:
         return P("data")

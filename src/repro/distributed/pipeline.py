@@ -104,14 +104,16 @@ def make_pipeline_train_fn(cfg: ModelCfg, mesh: Mesh, n_micro: int,
         @functools.partial(
             shard_map, mesh=mesh,
             in_specs=(blk_specs, rest_specs, P(), P()),
-            out_specs=P(),
+            out_specs=P(*axes),
             check_rep=False)
         def run(blocks_l, rest_l, tok, lab):
             # blocks_l leaves: (1, L/ns, ...) — this stage's layers
             my = jax.tree_util.tree_map(lambda a: a[0], blocks_l)
             stage = jax.lax.axis_index(axes[0])
             if len(axes) == 2:
-                stage = stage * jax.lax.axis_size(axes[1]) \
+                # psum(1, axis) == axis size; jax.lax.axis_size does not
+                # exist on the pinned jax (0.4.x)
+                stage = stage * jax.lax.psum(1, axes[1]) \
                     + jax.lax.axis_index(axes[1])
             is_first = stage == 0
             is_last = stage == ns - 1
@@ -172,12 +174,20 @@ def make_pipeline_train_fn(cfg: ModelCfg, mesh: Mesh, n_micro: int,
             (state, loss_acc), _ = jax.lax.scan(
                 tick, (state0, jnp.zeros((), jnp.float32)),
                 jnp.arange(total_ticks))
-            # every stage returns the same scalar: only last stage has loss;
-            # broadcast it with a psum over the stage axes
-            loss = jax.lax.psum(loss_acc, axes)
-            return loss / n_micro
+            # one scalar shard per stage (only the last is non-zero); summed
+            # OUTSIDE the shard_map — transposing an in-map psum trips the
+            # pinned jax 0.4.x shard_map under check_rep=False
+            return loss_acc.reshape((1,) * len(axes))
 
-        return run(blocks, rest, tokens, labels)
+        # remat the sharded region: grad-of-shard_map on the pinned jax
+        # 0.4.x mis-names scalar residuals (raises _SpecError); with
+        # checkpoint the only cross-boundary residuals are the inputs.
+        return jax.checkpoint(run)(blocks, rest, tokens, labels).sum() \
+            / n_micro
+
+    # checkpoint-of-shard_map requires a surrounding jit (eager closed_call
+    # under shard_map is unimplemented on jax 0.4.x)
+    loss_fn = jax.jit(loss_fn)
 
     return loss_fn
 

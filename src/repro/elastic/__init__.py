@@ -1,0 +1,19 @@
+"""Elastic runtime: churn-tolerant membership, straggler detection, and live
+re-scheduling over the FusionLLM stack (beyond-paper; see README §Elastic).
+
+Composition: scripted :class:`ChurnTrace` -> lease-based
+:class:`MembershipView` + EWMA :class:`StragglerDetector` ->
+:func:`replan` (OP-Fence on the survivors, minimal migration plan) ->
+:mod:`migrate` (bit-exact state movement over the checkpoint wire format)
+-> :class:`ElasticController` (drives the runtime across epochs and charges
+the discrete-event clock for detection, migration, and pipeline refill).
+"""
+from .membership import (ChurnEvent, ChurnTrace, MembershipDelta,
+                         MembershipView, single_failure_trace)
+from .detector import StragglerDetector
+from .replan import (MigrationPlan, OpMove, ReplanResult, diff_schedules,
+                     replan, state_bytes)
+from .migrate import (apply_moves, assert_bitexact, extract_op_state,
+                      pack_op_state, trees_bitexact, unpack_op_state)
+from .controller import (ElasticController, ElasticRunResult, EpochRecord,
+                         StepRecord)

@@ -1,0 +1,379 @@
+"""ElasticController: drives the FusionLLM runtime across membership epochs.
+
+One epoch = one stable OP-Fence schedule.  Per training step the controller
+(1) runs the real RAD numerics through :class:`DecentralizedRuntime` (unless
+``train=False``), (2) advances a simulated wall-clock by the discrete-event
+:func:`simulate_iteration` on the *ground-truth* cluster (scripted slowdowns
+applied), (3) feeds observed per-stage times to the straggler detector, and
+(4) polls the lease-based membership view.  On a detected failure, join,
+straggler, or recovery it transitions epochs: re-plan via OP-Fence on the
+survivors, migrate state bit-exactly through the checkpoint wire format, and
+charge the simulated clock for what churn really costs:
+
+    detection delay   — implicit: the clock kept running (wasted) between the
+                        failure and its lease expiry / EWMA warm-up;
+    lost work         — steps after the last checkpoint that predates the
+                        failure are rolled back (their samples don't count);
+    migration         — bulk state transfers over the real α–β links
+                        (:func:`simulate_migration`);
+    pipeline refill   — a fresh schedule starts cold (fill term of Eq. 3).
+
+Determinism contract: same graph/cluster/trace/seeds → identical epochs,
+schedules, clocks, and (when training) identical losses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.checkpoint import deserialize_state, serialize_state
+from repro.core.compression import CompressionPlan, plan_none
+from repro.core.estimator import ClusterSpec, predict_step_times
+from repro.core.executor import (DecentralizedRuntime, pipeline_fill_seconds,
+                                 simulate_iteration)
+from repro.core.network import with_slowdowns
+from repro.core.opgraph import OpGraph, OpProfile
+from repro.core.scheduler import Schedule, schedule_opfence
+from repro.optim.optimizers import Optimizer
+
+from .detector import StragglerDetector
+from .membership import ChurnEvent, ChurnTrace, MembershipView
+from .migrate import apply_moves, assert_bitexact
+from .replan import MigrationPlan, ReplanResult, replan
+
+PlanFactory = Callable[[OpGraph, Mapping[str, OpProfile], ClusterSpec,
+                        Mapping[str, int]], CompressionPlan]
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int                  # data step index (replays after a rollback)
+    epoch: int
+    loss: Optional[float]
+    step_seconds: float        # simulated iteration wall-clock
+    clock: float               # cumulative simulated time at step end
+    lost: bool = False         # rolled back by a later failure
+
+
+@dataclasses.dataclass
+class EpochRecord:
+    epoch: int
+    at_step: int               # first data step executed under this epoch
+    clock: float               # sim time when the epoch began
+    cause: str                 # initial | failure | join | straggler | recovery
+    events: List[ChurnEvent]
+    alive: List[int]
+    stage_devices: List[int]
+    n_moves: int
+    moved_bytes: float
+    detect_seconds: float      # event time -> broker noticing
+    migrate_seconds: float
+    refill_seconds: float
+    rollback_steps: int
+    replan_mode: str = ""      # auto-chosen candidate: full | anchored
+
+
+@dataclasses.dataclass
+class ElasticRunResult:
+    steps: List[StepRecord]
+    epochs: List[EpochRecord]
+    params: Any
+    opt_state: Any
+    total_seconds: float
+
+    @property
+    def losses(self) -> List[Tuple[int, float]]:
+        """(data step, loss) for surviving (non-rolled-back) steps."""
+        return [(r.step, r.loss) for r in self.steps
+                if not r.lost and r.loss is not None]
+
+    @property
+    def useful_steps(self) -> int:
+        return sum(1 for r in self.steps if not r.lost)
+
+    def samples_per_second(self, batch_size: int) -> float:
+        if self.total_seconds <= 0:
+            return float("inf")
+        return self.useful_steps * batch_size / self.total_seconds
+
+
+@dataclasses.dataclass
+class _Checkpoint:
+    step: int                  # state AFTER this many data steps
+    clock: float               # sim time when taken
+    blob: Optional[bytes]      # None in sim-only mode
+
+
+class ElasticController:
+    """Churn-tolerant training driver (see module docstring)."""
+
+    def __init__(self, graph: OpGraph, profiles: Mapping[str, OpProfile],
+                 cluster: ClusterSpec, trace: ChurnTrace,
+                 optimizer: Optional[Optimizer] = None,
+                 plan_factory: Optional[PlanFactory] = None,
+                 n_micro: int = 2, seed: int = 0,
+                 lease_s: float = 10.0,
+                 checkpoint_interval: int = 1,
+                 checkpoint_history: int = 8,
+                 detector_alpha: float = 0.4,
+                 detector_threshold: float = 1.8,
+                 detector_min_obs: int = 3,
+                 opt_state_mult: float = 2.0,
+                 replan_mode: str = "auto",
+                 amortize_steps: float = 100.0,
+                 use_kernel: bool = False,
+                 initial_alive: Optional[Sequence[int]] = None):
+        self.graph = graph
+        self.profiles = profiles
+        self.base_cluster = cluster
+        self.optimizer = optimizer
+        self.plan_factory = plan_factory or (
+            lambda g, prof, cl, placement: plan_none(g, placement))
+        self.n_micro = int(n_micro)
+        self.seed = int(seed)
+        self.checkpoint_interval = max(1, int(checkpoint_interval))
+        self.checkpoint_history = max(2, int(checkpoint_history))
+        self.opt_state_mult = float(opt_state_mult)
+        self.replan_mode = replan_mode
+        self.amortize_steps = float(amortize_steps)
+        self.use_kernel = use_kernel
+        self._det_cfg = dict(alpha=detector_alpha,
+                             threshold=detector_threshold,
+                             min_observations=detector_min_obs)
+
+        self.membership = MembershipView(len(cluster), trace, lease_s=lease_s,
+                                         initial_alive=initial_alive)
+        self.believed_factors: Dict[int, float] = {}
+        self.epoch_records: List[EpochRecord] = []
+        self.step_records: List[StepRecord] = []
+        self.clock = 0.0
+        self._install_schedule(cause="initial", events=[], dead=[],
+                               at_step=0, detect_seconds=0.0,
+                               migration=None, rollback_steps=0)
+
+    # ----------------------------------------------------------- topology --
+    def believed_cluster(self) -> ClusterSpec:
+        """What the broker schedules against: base sheets degraded by the
+        detector's confirmed slowdowns."""
+        return with_slowdowns(self.base_cluster, self.believed_factors)
+
+    def true_cluster(self) -> ClusterSpec:
+        """Ground truth for the simulator: scripted slowdowns in force now."""
+        return with_slowdowns(self.base_cluster,
+                              self.membership.slow_factor)
+
+    # ----------------------------------------------------------- epochs ----
+    def _install_schedule(self, cause: str, events: List[ChurnEvent],
+                          dead: Sequence[int], at_step: int,
+                          detect_seconds: float,
+                          migration: Optional[MigrationPlan],
+                          rollback_steps: int,
+                          replan_mode: str = "") -> None:
+        believed = self.believed_cluster()
+        if migration is None:     # initial epoch: schedule from scratch
+            self.schedule = schedule_opfence(
+                self.graph, self.profiles, believed, seed=self.seed,
+                device_subset=self.membership.alive)
+        placement = self.schedule.placement
+        self.plan = self.plan_factory(self.graph, self.profiles, believed,
+                                      placement)
+        if migration is None:
+            migrate_s = refill_s = 0.0
+            n_moves, moved_bytes = 0, 0.0
+        else:
+            migrate_s = migration.seconds
+            n_moves, moved_bytes = len(migration.moves), migration.total_bytes
+            refill_s = pipeline_fill_seconds(self.graph, self.profiles,
+                                             self.schedule,
+                                             self.true_cluster(), self.plan)
+            self.clock += migrate_s + refill_s
+        self._obs_cache = None
+        self.runtime = DecentralizedRuntime(self.graph, self.schedule,
+                                            self.plan,
+                                            use_kernel=self.use_kernel)
+        self.detector = StragglerDetector(
+            predict_step_times(self.graph, self.profiles, believed,
+                               placement),
+            **self._det_cfg)
+        self.epoch_records.append(EpochRecord(
+            epoch=len(self.epoch_records), at_step=at_step, clock=self.clock,
+            cause=cause, events=list(events),
+            alive=list(self.membership.alive),
+            stage_devices=self.schedule.stage_devices(),
+            n_moves=n_moves, moved_bytes=moved_bytes,
+            detect_seconds=detect_seconds, migrate_seconds=migrate_s,
+            refill_seconds=refill_s, rollback_steps=rollback_steps,
+            replan_mode=replan_mode))
+
+    @property
+    def epoch(self) -> int:
+        return len(self.epoch_records) - 1
+
+    # -------------------------------------------------------------- run ----
+    def run(self, steps: int,
+            data_fn: Optional[Callable[[int], Sequence[Mapping]]] = None,
+            params: Any = None) -> ElasticRunResult:
+        """Train (or simulate) ``steps`` useful data steps through churn.
+
+        ``data_fn(step)`` must return the micro-batch list for that data step
+        deterministically — after a rollback the controller replays step
+        indices and must see identical batches.  ``params`` starts training;
+        with ``data_fn=None`` the controller runs timing-only.
+        """
+        train = data_fn is not None
+        if train and (params is None or self.optimizer is None):
+            raise ValueError("training mode needs params and an optimizer")
+        opt_state = self.optimizer.init(params) if train else None
+        ckpts: List[_Checkpoint] = [_Checkpoint(
+            step=0, clock=self.clock,
+            blob=serialize_state(params, opt_state) if train else None)]
+
+        step = 0          # next data step to execute
+        while step < steps:
+            loss_val = None
+            if train:
+                mbs = data_fn(step)
+                loss, grads = self.runtime.train_step(params, mbs)
+                params, opt_state = self.optimizer.update(grads, opt_state,
+                                                          params)
+                loss_val = float(loss)
+            sim_time, observed = self._step_timing()
+            self.clock += sim_time
+            step += 1
+            self.step_records.append(StepRecord(
+                step=step, epoch=self.epoch, loss=loss_val,
+                step_seconds=sim_time, clock=self.clock))
+            # a degraded node shows up as observed step time > prediction
+            self.detector.observe(observed)
+            if step % self.checkpoint_interval == 0:
+                ckpts.append(_Checkpoint(
+                    step=step, clock=self.clock,
+                    blob=serialize_state(params, opt_state) if train
+                    else None))
+                del ckpts[:-self.checkpoint_history]
+
+            transition = self._pending_transition()
+            if transition is None:
+                continue
+            cause, deltas = transition
+            dead = [d.event.node for d in deltas if d.event.kind == "leave"]
+            detect_s = max((self.clock - d.event.time for d in deltas),
+                           default=0.0)
+
+            rollback_steps = 0
+            failure_times = [d.event.time for d in deltas
+                             if d.event.kind == "leave"]
+            need_rollback = bool(failure_times) and any(
+                self.schedule.assignment[n] for n in dead)
+            if need_rollback:
+                # state shards on the dead node are gone: recover from the
+                # newest checkpoint that predates the failure
+                t_fail = min(failure_times)
+                valid = [c for c in ckpts if c.clock <= t_fail]
+                if not valid:
+                    raise RuntimeError(
+                        "no checkpoint predates the failure — raise "
+                        "checkpoint_history or lower checkpoint_interval")
+                ck = valid[-1]
+                rollback_steps = step - ck.step
+                if train:
+                    params, opt_state = deserialize_state(ck.blob, params,
+                                                          opt_state)
+                for r in self.step_records:
+                    if r.step > ck.step:
+                        r.lost = True
+                step = ck.step
+                ckpts = [c for c in ckpts if c.step <= ck.step]
+
+            joined = [d.event.node for d in deltas if d.event.kind == "join"]
+            rp = self._replan(dead, joined)
+            if train:
+                live = [m for m in rp.migration.moves
+                        if not m.from_checkpoint]
+                before = params
+                out = apply_moves(params, opt_state, live)
+                assert_bitexact(before, out.params, "migrated params")
+                params, opt_state = out.params, out.opt_state
+            self.schedule = rp.schedule
+            self._install_schedule(cause=cause,
+                                   events=[d.event for d in deltas],
+                                   dead=dead, at_step=step,
+                                   detect_seconds=detect_s,
+                                   migration=rp.migration,
+                                   rollback_steps=rollback_steps,
+                                   replan_mode=rp.mode)
+        return ElasticRunResult(steps=self.step_records,
+                                epochs=self.epoch_records,
+                                params=params, opt_state=opt_state,
+                                total_seconds=self.clock)
+
+    def _step_timing(self) -> Tuple[float, Dict[int, float]]:
+        """(simulated iteration seconds, observed per-stage times) under the
+        ground-truth cluster.  Both are pure functions of (schedule, true
+        slowdowns), which only change at churn events or re-plans — cached
+        so the per-step hot loop skips the estimator sweeps."""
+        key = tuple(sorted(self.membership.slow_factor.items()))
+        if self._obs_cache is not None and self._obs_cache[0] == key:
+            return self._obs_cache[1], self._obs_cache[2]
+        true_cl = self.true_cluster()
+        sim = simulate_iteration(self.graph, self.profiles, self.schedule,
+                                 true_cl, self.plan, n_micro=self.n_micro)
+        observed = predict_step_times(self.graph, self.profiles, true_cl,
+                                      self.schedule.placement)
+        self._obs_cache = (key, sim.iteration_time, observed)
+        return sim.iteration_time, observed
+
+    # ------------------------------------------------------- transitions ---
+    def _pending_transition(self):
+        """Poll membership + detector; decide whether an epoch change is due.
+        Returns (cause, deltas) or None."""
+        deltas = self.membership.poll(self.clock)
+        member_deltas = [d for d in deltas
+                         if d.event.kind in ("leave", "join")]
+        if member_deltas:
+            cause = "failure" if any(d.event.kind == "leave"
+                                     for d in member_deltas) else "join"
+            return cause, member_deltas
+        flagged = {d: f for d, f in self.detector.believed_factors().items()
+                   if self.believed_factors.get(d) is None}
+        if flagged:
+            self.believed_factors.update(flagged)
+            return "straggler", []
+        recovered = self._rehabilitated()
+        # a node drained of ops has no observable stage time; trust its own
+        # recovery announcement (the membership view surfaces the event)
+        recovered += [d.event.node for d in deltas
+                      if d.event.kind == "recover"
+                      and d.event.node in self.believed_factors
+                      and d.event.node not in recovered
+                      and self.detector.stats.get(d.event.node) is None]
+        if recovered:
+            for d in recovered:
+                del self.believed_factors[d]
+            return "recovery", []
+        return None
+
+    def _rehabilitated(self) -> List[int]:
+        """Believed-degraded nodes whose observations say they are healthy
+        again.  The detector predicts with the *believed* (degraded) speed,
+        so a fully recovered node shows severity ≈ its believed factor f
+        (observed = believed_prediction · f); severity near or below f means
+        the degradation is gone."""
+        out = []
+        for d, f in list(self.believed_factors.items()):
+            st = self.detector.stats.get(d)
+            if (st is not None and st.count >= self.detector.min_observations
+                    and self.detector.severity(d) <= f * 1.05):
+                out.append(d)
+        return out
+
+    def _replan(self, dead: Sequence[int],
+                joined: Sequence[int] = ()) -> ReplanResult:
+        for d in dead:
+            self.believed_factors.pop(d, None)
+        return replan(self.graph, self.profiles, self.believed_cluster(),
+                      self.schedule, alive=self.membership.alive, dead=dead,
+                      joined=joined, seed=self.seed,
+                      opt_state_mult=self.opt_state_mult,
+                      mode=self.replan_mode,
+                      amortize_steps=self.amortize_steps)

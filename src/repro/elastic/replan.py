@@ -1,0 +1,193 @@
+"""Incremental re-scheduling + migration planning (elastic runtime).
+
+On a membership epoch change the broker re-runs OP-Fence on the surviving /
+updated topology (``schedule_opfence(..., device_subset=alive)``), diffs the
+old and new stage assignments, and emits the *minimal* migration plan: only
+ops whose owner changed move, each carrying its parameters plus optimizer
+state.  Transfer cost is estimated over the real α–β link specs by the
+discrete-event :func:`repro.core.executor.simulate_migration`; ops stranded
+on a dead CompNode stream from the broker's checkpoint store instead (a dead
+node cannot send).
+
+Migration payloads are never lossy-compressed: AdaTopK is for per-step
+boundary tensors where error feedback and training itself absorb the loss;
+migrated parameters/optimizer state must land bit-exact or the loss curve
+jumps (see migrate.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.estimator import ClusterSpec, LinkSpec
+from repro.core.executor import (CHECKPOINT_LINK, MigrationSim,
+                                 simulate_migration)
+from repro.core.opgraph import OpGraph, OpProfile
+from repro.core.opgraph import chain as op_chain
+from repro.core.partition import partition_min_bottleneck
+from repro.core.scheduler import (Schedule, _to_full_assignment,
+                                  schedule_opfence)
+
+
+@dataclasses.dataclass(frozen=True)
+class OpMove:
+    """One op segment changing owner.  ``src=None`` — original owner dead,
+    state comes from the broker's checkpoint store."""
+
+    op: str
+    src: Optional[int]
+    dst: int
+    nbytes: int          # params + optimizer state on the wire
+
+    @property
+    def from_checkpoint(self) -> bool:
+        return self.src is None
+
+
+@dataclasses.dataclass
+class MigrationPlan:
+    """Diff between two schedules, grouped into per-link bulk transfers."""
+
+    moves: List[OpMove]
+    sim: MigrationSim
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(m.nbytes for m in self.moves))
+
+    @property
+    def seconds(self) -> float:
+        return self.sim.seconds
+
+    def transfers(self) -> Dict[Tuple[Optional[int], int], float]:
+        return _group_transfers(self.moves)
+
+
+@dataclasses.dataclass
+class ReplanResult:
+    schedule: Schedule
+    migration: MigrationPlan
+    alive: List[int]
+    dead: List[int]
+    mode: str = "full"           # which candidate won: full | anchored
+
+
+def state_bytes(profile: OpProfile, opt_state_mult: float = 2.0,
+                param_itemsize: int = 4) -> int:
+    """Wire bytes to relocate one op: params + optimizer state (AdamW keeps
+    two fp32 moments per parameter -> mult 2.0; SGD momentum 1.0)."""
+    return int(profile.n_params * param_itemsize * (1.0 + opt_state_mult))
+
+
+def diff_schedules(old: Schedule, new: Schedule,
+                   profiles: Mapping[str, OpProfile],
+                   dead: Sequence[int] = (),
+                   opt_state_mult: float = 2.0) -> List[OpMove]:
+    """Ops whose owner changed, in graph order.  Ops with no trainable state
+    (placeholders, activations-only ops) still move but cost zero bytes —
+    re-binding ownership is a control-plane action."""
+    dead_set = set(int(d) for d in dead)
+    old_place, new_place = old.placement, new.placement
+    moves: List[OpMove] = []
+    for op, src in old_place.items():
+        dst = new_place.get(op)
+        if dst is None or dst == src:
+            continue
+        nbytes = state_bytes(profiles[op], opt_state_mult) \
+            if op in profiles else 0
+        moves.append(OpMove(op=op, src=None if src in dead_set else src,
+                            dst=dst, nbytes=nbytes))
+    return moves
+
+
+def _group_transfers(moves: Sequence[OpMove]
+                     ) -> Dict[Tuple[Optional[int], int], float]:
+    out: Dict[Tuple[Optional[int], int], float] = {}
+    for m in moves:
+        key = (m.src, m.dst)
+        out[key] = out.get(key, 0.0) + float(m.nbytes)
+    return out
+
+
+def _anchored_schedule(graph: OpGraph, profiles: Mapping[str, OpProfile],
+                       cluster: ClusterSpec, old_schedule: Schedule,
+                       alive: Sequence[int], joined: Sequence[int],
+                       edge_bytes_scale: Optional[Mapping[int, float]]
+                       ) -> Optional[Schedule]:
+    """Stability-preferring candidate: keep the surviving stage order from
+    the old schedule (append joiners at the tail) and re-run only the DP
+    split.  Most segment boundaries barely move, so the migration diff stays
+    near the dead node's own shard instead of reshuffling the whole model —
+    a fresh OP-Fence pass re-cuts every boundary and can move everything.
+    """
+    alive_set = set(int(a) for a in alive)
+    order = [d for d in old_schedule.stage_devices() if d in alive_set]
+    order += [int(j) for j in joined
+              if j in alive_set and j not in set(order)]
+    n_ops = len(op_chain(graph))
+    order = order[:max(1, min(len(order), n_ops))]
+    if not order:
+        return None
+    segs, pace = partition_min_bottleneck(graph, profiles, cluster, order,
+                                          edge_bytes_scale=edge_bytes_scale)
+    a, s = _to_full_assignment(segs, order, len(cluster))
+    return Schedule(assignment=a, stages=s, clusters=old_schedule.clusters,
+                    predicted_pace=pace)
+
+
+def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
+           cluster: ClusterSpec, old_schedule: Schedule,
+           alive: Sequence[int], dead: Sequence[int] = (),
+           joined: Sequence[int] = (), seed: int = 0,
+           opt_state_mult: float = 2.0,
+           checkpoint_link: LinkSpec = CHECKPOINT_LINK,
+           edge_bytes_scale: Optional[Mapping[int, float]] = None,
+           mode: str = "auto", amortize_steps: float = 100.0
+           ) -> ReplanResult:
+    """Incremental re-scheduling with a migration-aware candidate choice.
+
+    Two candidates: ``full`` re-runs OP-Fence from scratch on the survivors
+    (best steady-state pace, potentially huge migration); ``anchored`` keeps
+    the surviving stage order and only re-cuts the DP split (near-minimal
+    migration, possibly worse pace).  ``mode='auto'`` picks the one with the
+    lower total cost  ``migration_seconds + amortize_steps · pace`` — i.e.
+    a pace advantage must pay back its migration bill within
+    ``amortize_steps`` future micro-batches or stability wins.
+
+    ``cluster`` is the broker's *believed* topology (degraded λ_p for flagged
+    stragglers already folded in via ``network.with_slowdowns``); ``alive``
+    restricts placement; ``dead`` marks nodes whose state is unrecoverable
+    from the node itself; ``joined`` lists newly admitted CompNodes (the
+    anchored candidate appends them at the pipeline tail).
+    """
+    if mode not in ("auto", "full", "anchored"):
+        raise ValueError(f"unknown replan mode {mode!r}")
+    candidates: Dict[str, Schedule] = {}
+    if mode in ("auto", "full"):
+        candidates["full"] = schedule_opfence(
+            graph, profiles, cluster, seed=seed,
+            edge_bytes_scale=edge_bytes_scale, device_subset=alive)
+    if mode in ("auto", "anchored"):
+        anchored = _anchored_schedule(graph, profiles, cluster, old_schedule,
+                                      alive, joined, edge_bytes_scale)
+        if anchored is not None:
+            candidates["anchored"] = anchored
+    if not candidates:
+        raise RuntimeError("no feasible re-plan candidate")
+
+    best: Optional[Tuple[float, str, Schedule, List[OpMove], Any]] = None
+    for name, sched in sorted(candidates.items()):
+        moves = diff_schedules(old_schedule, sched, profiles, dead=dead,
+                               opt_state_mult=opt_state_mult)
+        sim = simulate_migration(_group_transfers(moves), cluster,
+                                 checkpoint_link=checkpoint_link)
+        pace = sched.predicted_pace if sched.predicted_pace is not None \
+            else float("inf")
+        cost = sim.seconds + amortize_steps * pace
+        if best is None or cost < best[0]:
+            best = (cost, name, sched, moves, sim)
+    _, name, sched, moves, sim = best
+    return ReplanResult(schedule=sched,
+                        migration=MigrationPlan(moves=moves, sim=sim),
+                        alive=sorted(int(a) for a in alive),
+                        dead=sorted(int(d) for d in dead), mode=name)

@@ -1,7 +1,9 @@
 """Eq. 2–4 throughput model + discrete-event simulator invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (NodeLoad, estimate_iteration, latency_pipelined,
                         latency_single_pass, network, plan_adatopk,
