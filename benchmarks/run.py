@@ -21,6 +21,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--steps", type=int, default=80,
                     help="convergence steps (Fig. 8)")
+    ap.add_argument("--churn-profile", default="gpt2-xl",
+                    choices=["gpt2-xl", "tiny"],
+                    help="churn bench workload (tiny = CI smoke)")
     args = ap.parse_args()
 
     from . import (ablation_microbatch, churn, convergence, gpu_table,
@@ -28,7 +31,8 @@ def main() -> None:
                    speedup_table)
 
     benches = {
-        "churn_elastic": lambda: churn.run(csv_writer),
+        "churn_elastic": lambda: churn.run(csv_writer,
+                                           profile=args.churn_profile),
         "table1_gpu": lambda: gpu_table.run(csv_writer),
         "fig8_convergence": lambda: convergence.run(csv_writer,
                                                     steps=args.steps),

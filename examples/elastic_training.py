@@ -3,12 +3,21 @@
 Runs real RAD numerics (DecentralizedRuntime) for a small GPT on the paper's
 testbed-1 topology (Cluster A: RTX4090s, Cluster B: RTX2080s) with a
 scripted churn trace: one CompNode dies mid-run.  The ElasticController
-detects the loss at lease expiry, re-plans via OP-Fence on the survivors,
-migrates parameters + AdamW state bit-exactly through the checkpoint wire
-format, and continues — the printed loss curve is continuous through the
-fail-over (identical, step for step, to a run with no failure).
+detects the loss at lease expiry (stragglers it detects from executor
+telemetry — StepTiming samples aggregated by the broker's TelemetryLog, not
+estimator predictions), re-plans via OP-Fence on the survivors, migrates
+parameters + AdamW state bit-exactly through the checkpoint wire format, and
+continues — the printed loss curve is continuous through the fail-over
+(identical, step for step, to a run with no failure).
+
+``--migration-mode overlap`` recovers without stopping the world: only the
+dead shard's checkpoint restore blocks, training resumes on the interim
+schedule, and any survivor bulk streams in the background over
+bandwidth-shared links (or is skipped outright when the re-planned pace
+would not pay for the stream).
 
     PYTHONPATH=src python examples/elastic_training.py [--steps 30]
+    PYTHONPATH=src python examples/elastic_training.py --migration-mode overlap
 """
 import argparse
 import sys
@@ -31,6 +40,9 @@ def main() -> int:
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--fail-at-step", type=float, default=0.4,
                     help="failure time as a fraction of the run")
+    ap.add_argument("--migration-mode", default="stop",
+                    choices=["stop", "overlap"],
+                    help="stop-the-world vs overlapped recovery")
     args = ap.parse_args()
 
     cfg = ModelCfg(name="gpt-elastic-demo", family="dense", n_layers=6,
@@ -67,23 +79,30 @@ def main() -> int:
 
     ctrl = ElasticController(graph, profiles, cluster, trace,
                              optimizer=adamw(lr=3e-3), n_micro=n_micro,
-                             lease_s=1.5 * t_iter)
+                             lease_s=1.5 * t_iter,
+                             migration_mode=args.migration_mode)
     res = ctrl.run(steps=args.steps, data_fn=data_fn, params=params)
 
     print("\nstep  epoch  loss     sim_clock")
     for r in res.steps:
-        mark = "  (lost, replayed)" if r.lost else ""
+        mark = "  (lost, replayed)" if r.lost \
+            else ("  (migrating in background)" if r.overlapping else "")
         print(f"{r.step:4d}  {r.epoch:5d}  {r.loss:.4f}  "
               f"{r.clock:9.1f}s{mark}")
     print("\nepochs:")
     for e in res.epochs:
+        extra = f" bg={e.background_bytes / 1e6:.1f}MB" \
+            if e.background_bytes else ""
         print(f"  epoch {e.epoch}: cause={e.cause} mode={e.replan_mode or '-'} "
               f"stages={len(e.stage_devices)} moves={e.n_moves} "
               f"moved={e.moved_bytes / 1e6:.1f}MB "
               f"detect={e.detect_seconds:.1f}s "
               f"migrate={e.migrate_seconds:.1f}s "
               f"refill={e.refill_seconds:.1f}s "
-              f"rollback={e.rollback_steps} steps")
+              f"rollback={e.rollback_steps} steps{extra}")
+    print(f"\ntelemetry: {ctrl.telemetry.n_samples} StepTiming samples "
+          f"aggregated this epoch; detector observes the "
+          f"median-of-{ctrl.telemetry.window} window")
     losses = [l for _, l in res.losses]
     ok = any(e.cause == "failure" for e in res.epochs) \
         and losses[-1] < losses[0]

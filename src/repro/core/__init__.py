@@ -20,6 +20,6 @@ from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
                   pipeline_loss_and_grad_ef, pipeline_train_step,
                   single_device_loss_and_grad)
 from .executor import (DecentralizedRuntime, MigrationSim, SimResult,
-                       pipeline_fill_seconds, simulate_iteration,
-                       simulate_migration)
+                       StepTiming, TelemetrySink, pipeline_fill_seconds,
+                       simulate_iteration, simulate_migration)
 from . import network

@@ -12,6 +12,17 @@ hard::
 
     r_i = max(1, 3 r · R_i / max_p R_p)
 
+**Break-even clamp** (bugfix over the paper's formula): the encoding has a
+fixed per-kept-element overhead, so a ratio in ``(1, break_even]`` *inflates*
+wire traffic instead of shrinking it — for the paper encoding ``k·12`` bytes
+beat the dense ``d·4`` only when ``r = d/k > 3``; for the mask encoding
+``d/8 + 4k ≤ 4d`` requires ``r > 32/31``.  :func:`adaptive_ratios` clamps any
+ratio at or below the encoding's break-even to 1.0 (send dense), and
+:func:`plan_adatopk` additionally verifies each planned edge with the exact
+integer :func:`wire_bytes` (ceil(d/r) can tip a ratio just above break-even
+back over the dense size), so no planned edge ever carries more bytes than
+the uncompressed tensor.
+
 Beyond-paper extras (both off by default, flagged where used):
 * mask+values encoding — 1 bit/elem bitmap instead of int64 indexes
   (overhead ``(d/8 + 4k)/(4d)`` instead of ``3k/d``) — TPU-friendly since the
@@ -45,8 +56,13 @@ def topk_select(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
 
 
 def topk_decode(values: jax.Array, idx: jax.Array, shape: Tuple[int, ...],
-                dtype=jnp.float32) -> jax.Array:
-    """Scatter values back into zeros (paper Fig. 6 'Decoded Vector')."""
+                dtype=None) -> jax.Array:
+    """Scatter values back into zeros (paper Fig. 6 'Decoded Vector').
+
+    ``dtype`` defaults to ``values.dtype`` so a bf16 boundary round-trips as
+    bf16 — decoding must not silently upcast the wire payload."""
+    if dtype is None:
+        dtype = values.dtype
     flat = jnp.zeros((int(np.prod(shape)),), dtype=dtype)
     flat = flat.at[idx].set(values.astype(dtype))
     return flat.reshape(shape)
@@ -97,18 +113,43 @@ def wire_bytes(numel: int, ratio: float, encoding: str = "paper",
 
 
 # --------------------------------------------------------------- AdaTopK ---
-def adaptive_ratios(recv_times: Sequence[float], r: float,
-                    index_overhead: float = 3.0) -> list:
-    """Eq. 7: per-CompNode ratio from estimated original communication times.
+def encoding_break_even(encoding: str, itemsize: int = 4) -> float:
+    """Smallest ratio at which the encoding stops inflating wire traffic.
 
-    r_i = max(1, 3 r · R_i / max_p R_p).  CompNodes on fast links get r_i→1
-    (no compression); the slowest link gets the full 3r.
+    paper : k·12 bytes vs dense d·itemsize  →  r > 12/itemsize   (3.0 @ fp32)
+    mask  : k·4 + d/8 vs dense d·itemsize   →  r > 4/(itemsize − 1/8)
+    none  : never compresses → +inf.
     """
+    if encoding == "paper":
+        return 12.0 / itemsize
+    if encoding == "mask":
+        return 4.0 / (itemsize - 0.125)
+    if encoding == "none":
+        return float("inf")
+    raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def adaptive_ratios(recv_times: Sequence[float], r: float,
+                    index_overhead: float = 3.0,
+                    break_even: Optional[float] = None) -> list:
+    """Eq. 7 with a break-even clamp: per-CompNode ratio from estimated
+    original communication times.
+
+    r_i = 3 r · R_i / max_p R_p.  CompNodes on fast links get r_i → 1 (no
+    compression); the slowest link gets the full 3r.  Any r_i at or below
+    ``break_even`` (default: ``index_overhead``, the paper encoding's
+    per-element overhead factor) is clamped to 1.0 — the paper's
+    ``max(1, ·)`` floor still pays ``index_overhead×`` per kept element, so
+    ratios in ``(1, break_even]`` would *inflate* the wire payload.
+    """
+    if break_even is None:
+        break_even = index_overhead
     R = np.asarray(list(recv_times), dtype=np.float64)
     mx = float(R.max()) if R.size else 0.0
     if mx <= 0.0:
         return [1.0 for _ in recv_times]
-    return [float(max(1.0, index_overhead * r * Ri / mx)) for Ri in R]
+    raw = [index_overhead * r * Ri / mx for Ri in R]
+    return [float(ri) if ri > break_even else 1.0 for ri in raw]
 
 
 @dataclasses.dataclass
@@ -142,27 +183,47 @@ def plan_none(graph, placement) -> CompressionPlan:
 
 
 def plan_uniform(graph, placement: Mapping[str, int], ratio: float,
-                 encoding: str = "paper") -> CompressionPlan:
+                 encoding: str = "paper",
+                 error_feedback: bool = False) -> CompressionPlan:
     """Uniform Top-K baseline: every cross-node edge compresses at r."""
     edges = {e: float(ratio) for e in _cross_edges(graph, placement)}
-    return CompressionPlan(edge_ratio=edges, base_ratio=ratio, encoding=encoding)
+    return CompressionPlan(edge_ratio=edges, base_ratio=ratio,
+                          encoding=encoding, error_feedback=error_feedback)
 
 
 def plan_adatopk(graph, profiles, cluster, placement: Mapping[str, int],
                  ratio: float, encoding: str = "paper",
-                 index_overhead: float = 3.0) -> CompressionPlan:
-    """AdaTopK: Eq. 7 driven by the estimated per-edge receive times."""
+                 index_overhead: float = 3.0,
+                 error_feedback: bool = False) -> CompressionPlan:
+    """AdaTopK: Eq. 7 driven by the estimated per-edge receive times.
+
+    Ratios at or below the encoding's break-even are clamped to 1.0 (see
+    module docstring), and every surviving edge is verified against the exact
+    integer :func:`wire_bytes` — ``ceil(d/r)`` rounding can push a ratio just
+    above break-even back over the dense payload, so the guarantee here is
+    hard: no planned edge carries more wire bytes than its dense tensor.
+    """
     edges = list(_cross_edges(graph, placement))
     if not edges:
-        return CompressionPlan(edge_ratio={}, base_ratio=ratio, encoding=encoding)
+        return CompressionPlan(edge_ratio={}, base_ratio=ratio,
+                               encoding=encoding,
+                               error_feedback=error_feedback)
     times = []
     for (a, n) in edges:
         nbytes = profiles[a].out_bytes
         times.append(cluster.comm_time(placement[a], placement[n], nbytes))
-    ratios = adaptive_ratios(times, ratio, index_overhead=index_overhead)
-    return CompressionPlan(
-        edge_ratio={e: r for e, r in zip(edges, ratios) if r > 1.0},
-        base_ratio=ratio, encoding=encoding)
+    ratios = adaptive_ratios(times, ratio, index_overhead=index_overhead,
+                             break_even=encoding_break_even(encoding))
+    edge_ratio: Dict[Tuple[str, str], float] = {}
+    for (a, n), r_i in zip(edges, ratios):
+        if r_i <= 1.0:
+            continue
+        numel = int(np.prod(profiles[a].out_shape))
+        if wire_bytes(numel, r_i, encoding) >= numel * 4:
+            continue                      # integer rounding re-inflated it
+        edge_ratio[(a, n)] = r_i
+    return CompressionPlan(edge_ratio=edge_ratio, base_ratio=ratio,
+                           encoding=encoding, error_feedback=error_feedback)
 
 
 # ------------------------------------------------- differentiable boundary --

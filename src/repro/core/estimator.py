@@ -212,6 +212,31 @@ def estimate_op_costs(graph: OpGraph,
     return costs
 
 
+def predict_step_time_components(graph: OpGraph,
+                                 profiles: Mapping[str, OpProfile],
+                                 cluster: ClusterSpec,
+                                 placement: Mapping[str, int],
+                                 compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
+                                 ) -> Dict[int, Tuple[float, float]]:
+    """Per-CompNode (compute, recv) predicted FP+BP seconds, one micro-batch.
+
+    Both directions of every cross-node edge are charged to the CompNode
+    owning the *consumer* op — the attribution the executor's telemetry
+    samples reproduce, so predictions and observations decompose identically.
+    """
+    fwd = estimate_op_costs(graph, profiles, cluster, placement,
+                            compress_ratio, backward=False)
+    bwd = estimate_op_costs(graph, profiles, cluster, placement,
+                            compress_ratio, backward=True)
+    out: Dict[int, Tuple[float, float]] = {}
+    for n in graph.nodes:
+        p = placement[n]
+        comp, recv = out.get(p, (0.0, 0.0))
+        out[p] = (comp + fwd[n].comp_time + bwd[n].comp_time,
+                  recv + fwd[n].recv_time + bwd[n].recv_time)
+    return out
+
+
 def predict_step_times(graph: OpGraph,
                        profiles: Mapping[str, OpProfile],
                        cluster: ClusterSpec,
@@ -221,16 +246,14 @@ def predict_step_times(graph: OpGraph,
     """Per-CompNode predicted FP+BP seconds for one micro-batch.
 
     Sums Eq. (1) over each CompNode's assigned ops, forward and backward.
-    This is the reference the elastic straggler detector compares observed
-    per-stage step times against: a healthy node tracks its prediction, a
-    degraded one drifts above it.
+    This is the *reference prediction* the elastic straggler detector
+    compares against — never the observation source: observations come from
+    executor telemetry (:class:`repro.elastic.telemetry.TelemetryLog`), so a
+    node is judged by its measured pace, not by re-running the model that
+    scheduled it.
     """
-    fwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, backward=False)
-    bwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, backward=True)
     out: Dict[int, float] = {}
-    for n in graph.nodes:
-        p = placement[n]
-        out[p] = out.get(p, 0.0) + fwd[n].total + bwd[n].total
+    for p, (comp, recv) in predict_step_time_components(
+            graph, profiles, cluster, placement, compress_ratio).items():
+        out[p] = comp + recv
     return out

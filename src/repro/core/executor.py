@@ -27,8 +27,47 @@ import numpy as np
 from .compression import CompressionPlan, plan_none, wire_bytes, ratio_to_k
 from .estimator import ClusterSpec, LinkSpec
 from .opgraph import OpData, OpGraph, OpProfile, OpType
-from .rad import PipelineProgram, pipeline_loss_and_grad
+from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
+                  pipeline_loss_and_grad_ef)
 from .scheduler import Schedule
+
+
+# ========================================================== telemetry hook ==
+@dataclasses.dataclass(frozen=True)
+class StepTiming:
+    """One per-stage, per-micro-batch timing sample.
+
+    Emitted by :func:`simulate_iteration` (simulated seconds) and by
+    :class:`DecentralizedRuntime` (measured host wall-clock); consumed by the
+    broker-side :class:`repro.elastic.telemetry.TelemetryLog`, which
+    aggregates samples into the per-CompNode step times the straggler
+    detector observes.  ``comm_seconds`` is charged to the stage owning the
+    *consumer* op of each cross-stage edge in both passes — the same
+    attribution :func:`repro.core.estimator.predict_step_times` uses, so
+    telemetry observations and estimator predictions are directly comparable.
+    """
+
+    node: int                  # CompNode (device) index
+    stage: int                 # pipeline stage position
+    micro_batch: int
+    backward: bool
+    compute_seconds: float
+    comm_seconds: float = 0.0
+    step: int = 0              # training step the sample belongs to
+
+    @property
+    def seconds(self) -> float:
+        return self.compute_seconds + self.comm_seconds
+
+
+class TelemetrySink:
+    """Anything with ``record(StepTiming)``; the trivial list-backed sink."""
+
+    def __init__(self):
+        self.samples: List[StepTiming] = []
+
+    def record(self, sample: StepTiming) -> None:
+        self.samples.append(sample)
 
 
 # ===================================================== functional executor ==
@@ -65,11 +104,20 @@ class DecentralizedRuntime:
     compression and returns (mean loss, accumulated grads, OpData traffic
     log).  Gradient identity: messages with ``actual_op_user`` set are
     boundary gradients keyed producer->user (paper Table 3).
+
+    ``plan.error_feedback=True`` dispatches to the EF-SGD gradient transport
+    (:func:`repro.core.rad.pipeline_loss_and_grad_ef`); the residual memory
+    lives on the runtime and carries across micro-batches and steps.
+
+    ``telemetry`` (anything with ``record(StepTiming)``) receives one
+    measured-wall-clock sample per (stage, micro-batch, direction) — the
+    real-executor observation source for the broker's straggler detector.
     """
 
     def __init__(self, graph: OpGraph, schedule: Schedule,
                  plan: Optional[CompressionPlan] = None,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False,
+                 telemetry: Optional[Any] = None):
         self.graph = graph
         self.schedule = schedule
         self.plan = plan or plan_none(graph, schedule.placement)
@@ -78,9 +126,24 @@ class DecentralizedRuntime:
         self.comp_nodes = [CompNodeRuntime(dev, s)
                            for s, dev in enumerate(schedule.stage_devices())]
         self.traffic: List[OpData] = []
+        self.telemetry = telemetry
+        self.ef_state: Optional[Dict[str, jax.Array]] = None
+        self.step_index = 0
 
     def _log(self, msg: OpData) -> None:
         self.traffic.append(msg)
+
+    def _timing_cb(self, mb_idx: int):
+        if self.telemetry is None:
+            return None
+        devs = self.schedule.stage_devices()
+
+        def cb(stage: int, backward: bool, seconds: float) -> None:
+            self.telemetry.record(StepTiming(
+                node=devs[stage], stage=stage, micro_batch=mb_idx,
+                backward=backward, compute_seconds=seconds,
+                step=self.step_index))
+        return cb
 
     def train_step(self, params: Mapping[str, Any],
                    micro_batches: Sequence[Mapping[str, jax.Array]]
@@ -88,8 +151,17 @@ class DecentralizedRuntime:
         total = jnp.asarray(0.0, jnp.float32)
         acc: Optional[Dict[str, Any]] = None
         for mb_idx, mb in enumerate(micro_batches):
-            loss, grads = pipeline_loss_and_grad(
-                self.prog, params, mb, self.plan, self.use_kernel)
+            cb = self._timing_cb(mb_idx)
+            if self.plan.error_feedback:
+                if self.ef_state is None:
+                    self.ef_state = init_ef_state(self.prog, params, mb)
+                loss, grads, self.ef_state = pipeline_loss_and_grad_ef(
+                    self.prog, params, mb, self.plan, self.ef_state,
+                    self.use_kernel, timing_cb=cb)
+            else:
+                loss, grads = pipeline_loss_and_grad(
+                    self.prog, params, mb, self.plan, self.use_kernel,
+                    timing_cb=cb)
             # traffic accounting (envelope per cross-stage edge, FP + BP)
             for si, sd in enumerate(self.prog.subdags):
                 for a in sd.required_acti:
@@ -105,6 +177,7 @@ class DecentralizedRuntime:
             acc = grads if acc is None else jax.tree_util.tree_map(
                 jnp.add, acc, grads)
         n = float(len(micro_batches))
+        self.step_index += 1
         return total / n, jax.tree_util.tree_map(lambda g: g / n, acc)
 
     def _edge_ratio(self, producer: str, sd) -> float:
@@ -143,8 +216,10 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
     # boundary edges between consecutive stages (chain partition ⇒ boundary
     # traffic flows stage k -> k+1 in FP and back in BP); multi-user edges
     # (e.g. shared attention, cross-attention) may skip stages — each gets
-    # its own link transfer.
-    edges: List[Tuple[int, int, float]] = []  # (from_stage, to_stage, seconds)
+    # its own link transfer.  ``charge`` is the stage owning the consumer op,
+    # the stage whose telemetry sample absorbs the transfer time (matching
+    # the estimator's recv attribution, see StepTiming).
+    edges: List[Tuple[int, int, float, int]] = []  # (from, to, seconds, charge)
     stage_of = {d: i for i, d in enumerate(stages)}
     total_bytes = 0.0
     for n, node in graph.nodes.items():
@@ -160,7 +235,8 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
             if backward:
                 src, dst = dst, src
             t = cluster.comm_time(src, dst, nbytes)
-            edges.append((stage_of[src], stage_of[dst], t))
+            edges.append((stage_of[src], stage_of[dst], t,
+                          stage_of[placement[n]]))
             total_bytes += nbytes
     return stages, comp, edges, total_bytes
 
@@ -168,11 +244,18 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
 def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                        schedule: Schedule, cluster: ClusterSpec,
                        plan: Optional[CompressionPlan] = None,
-                       n_micro: int = 1) -> SimResult:
+                       n_micro: int = 1,
+                       telemetry: Optional[Any] = None,
+                       step: int = 0) -> SimResult:
     """Discrete-event GPipe replay: FP fills stage by stage per micro-batch,
     then BP drains in reverse.  Each device is a serial resource; each
     directed stage pair is a serial link; compute of micro-batch m+1 overlaps
-    the transfer of micro-batch m (the overlap Eq. 3 assumes)."""
+    the transfer of micro-batch m (the overlap Eq. 3 assumes).
+
+    ``telemetry`` (anything with ``record(StepTiming)``) receives one sample
+    per (stage, micro-batch, direction), stamped with ``step`` — the
+    simulated stand-in for real per-CompNode executor timings that the
+    elastic broker's TelemetryLog aggregates for straggler detection."""
     plan = plan or plan_none(graph, schedule.placement)
 
     def run_pass(backward: bool, t0: float, events, device_free, busy):
@@ -180,17 +263,18 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
             graph, profiles, schedule, cluster, plan, backward)
         k = len(stages)
         order = list(range(k - 1, -1, -1)) if backward else list(range(k))
-        in_edges: Dict[int, List[Tuple[int, float]]] = {}
-        for (s, d2, t) in edges:
-            in_edges.setdefault(d2, []).append((s, t))
+        in_edges: Dict[int, List[Tuple[int, float, int]]] = {}
+        for (s, d2, t, charge) in edges:
+            in_edges.setdefault(d2, []).append((s, t, charge))
         link_free: Dict[Tuple[int, int], float] = {}
         done = {}  # (stage, mb) -> finish time
         comm_total = 0.0
+        comm_charged: Dict[Tuple[int, int], float] = {}  # (stage, mb) -> s
         for mb in range(n_micro):
             for pos, st in enumerate(order):
                 dev = stages[st]
                 ready = t0
-                for (src, tcomm) in in_edges.get(st, []):
+                for (src, tcomm, charge) in in_edges.get(st, []):
                     dep = done.get((src, mb))
                     if dep is None:
                         continue
@@ -198,6 +282,8 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                     start = max(dep, link_free.get(lk, t0))
                     link_free[lk] = start + tcomm
                     comm_total += tcomm
+                    comm_charged[(charge, mb)] = \
+                        comm_charged.get((charge, mb), 0.0) + tcomm
                     ready = max(ready, start + tcomm)
                 start = max(ready, device_free.get(dev, t0))
                 end = start + comp[st]
@@ -206,6 +292,14 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                 done[(st, mb)] = end
                 events.append((start, end,
                                f"{'B' if backward else 'F'}{st}.mb{mb}"))
+        if telemetry is not None:
+            for st in range(k):
+                for mb in range(n_micro):
+                    telemetry.record(StepTiming(
+                        node=stages[st], stage=st, micro_batch=mb,
+                        backward=backward, compute_seconds=comp[st],
+                        comm_seconds=comm_charged.get((st, mb), 0.0),
+                        step=step))
         finish = max(done.values()) if done else t0
         return finish, comm_total, nbytes * n_micro
 
@@ -241,8 +335,8 @@ class MigrationSim:
 
 def simulate_migration(transfers: Mapping[Tuple[Optional[int], int], float],
                        cluster: ClusterSpec,
-                       checkpoint_link: LinkSpec = CHECKPOINT_LINK
-                       ) -> MigrationSim:
+                       checkpoint_link: LinkSpec = CHECKPOINT_LINK,
+                       bandwidth_fraction: float = 1.0) -> MigrationSim:
     """Discrete-event replay of a migration plan's bulk transfers.
 
     ``transfers`` maps (src CompNode, dst CompNode) -> bytes; ``src=None``
@@ -252,7 +346,13 @@ def simulate_migration(transfers: Mapping[Tuple[Optional[int], int], float],
     peers serializes, as does a node receiving from many), and the broker's
     checkpoint store is one shared uplink; transfers on disjoint endpoints
     overlap.  Deterministic: transfers run in sorted key order.
+
+    ``bandwidth_fraction`` < 1 models background migration sharing links with
+    foreground boundary traffic (overlapped-migration mode): each transfer
+    sees only that fraction of the link's bandwidth (α unchanged).
     """
+    if not (0.0 < bandwidth_fraction <= 1.0):
+        raise ValueError("bandwidth_fraction in (0, 1]")
     up_free: Dict[Any, float] = {}
     down_free: Dict[int, float] = {}
     events: List[Tuple[float, float, str]] = []
@@ -264,11 +364,12 @@ def simulate_migration(transfers: Mapping[Tuple[Optional[int], int], float],
         if nbytes <= 0:
             continue
         if src is None:
-            t = checkpoint_link.time(nbytes)
+            lk = checkpoint_link
             src_key: Any = "__ckpt__"
         else:
-            t = cluster.comm_time(src, dst, nbytes)
+            lk = cluster.link(src, dst)
             src_key = src
+        t = lk.alpha + lk.beta * float(nbytes) / bandwidth_fraction
         start = max(up_free.get(src_key, 0.0), down_free.get(dst, 0.0))
         end = start + t
         up_free[src_key] = end
@@ -293,5 +394,5 @@ def pipeline_fill_seconds(graph: OpGraph, profiles: Mapping[str, OpProfile],
     for backward in (False, True):
         _, comp, edges, _ = _stage_tables(graph, profiles, schedule, cluster,
                                           plan, backward)
-        total += sum(comp) + sum(t for (_, _, t) in edges)
+        total += sum(comp) + sum(t for (_, _, t, _) in edges)
     return total

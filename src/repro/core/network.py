@@ -14,7 +14,7 @@ multi-pod dry-run adaptation (intra-pod ICI vs. inter-pod links).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -159,6 +159,32 @@ def with_link_slowdowns(cluster: ClusterSpec,
         if f <= 0.0:
             raise ValueError("link slowdown factors must be > 0")
         links[(i, j)] = LinkSpec(alpha=lk.alpha, beta=lk.beta / f)
+    return ClusterSpec(list(cluster.devices), links)
+
+
+def with_shared_links(cluster: ClusterSpec,
+                      busy_pairs: Iterable[Tuple[int, int]],
+                      foreground_fraction: float = 0.5) -> ClusterSpec:
+    """Foreground view of a topology while background bulk transfers run.
+
+    Overlapped migration streams state in the background over specific links;
+    each link carrying an active background transfer keeps only
+    ``foreground_fraction`` of its bandwidth for foreground boundary traffic
+    (fair-share: the transfer slows training, it does not block it).  α is
+    unchanged — latency is not consumed by bulk flows.  Contention is
+    **per link**, the native granularity of the pairwise α–β model: a bulk
+    flow on a fast intra-cluster wire must not throttle the WAN edge the
+    pipeline is actually bound by.
+    """
+    if not (0.0 < foreground_fraction <= 1.0):
+        raise ValueError("foreground_fraction in (0, 1]")
+    busy = {(int(i), int(j)) for (i, j) in busy_pairs}
+    busy |= {(j, i) for (i, j) in busy}
+    links = {}
+    for (i, j), lk in cluster.links().items():
+        if (i, j) in busy:
+            lk = LinkSpec(alpha=lk.alpha, beta=lk.beta / foreground_fraction)
+        links[(i, j)] = lk
     return ClusterSpec(list(cluster.devices), links)
 
 

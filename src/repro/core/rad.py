@@ -21,6 +21,7 @@ contract of RAD.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -32,6 +33,10 @@ from .opgraph import OpGraph, OpType, SubDag
 
 
 Params = Mapping[str, Any]
+
+# Measured-wall-clock hook: (stage_index, backward, seconds) per stage call.
+# The DecentralizedRuntime wraps this into StepTiming telemetry samples.
+TimingCb = Callable[[int, bool, float], None]
 
 
 def make_stage_fn(graph: OpGraph, subdag: SubDag
@@ -121,10 +126,13 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
                      inputs: Mapping[str, jax.Array],
                      plan: Optional[CompressionPlan] = None,
                      use_kernel: bool = False,
-                     compress_bwd: bool = True
+                     compress_bwd: bool = True,
+                     timing_cb: Optional[TimingCb] = None
                      ) -> Tuple[jax.Array, List[Any], List[Dict[str, jax.Array]]]:
     """Forward sweep.  Returns (total_loss, vjp closures per stage, the
-    per-stage received ext_acts — needed to key backward cotangents)."""
+    per-stage received ext_acts — needed to key backward cotangents).
+    ``timing_cb(stage, backward=False, seconds)`` receives each stage's
+    measured host wall-clock (telemetry hook; None = no instrumentation)."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
     stage_params = prog.split_params(params)
     stage_inputs = prog.split_inputs(inputs)
@@ -136,8 +144,14 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
     for si, (fn, sd) in enumerate(zip(prog.stage_fns, prog.subdags)):
         ext = {a: mailbox[(a, si)] for a in sd.required_acti}
         received.append(ext)
+        t0 = time.perf_counter() if timing_cb else 0.0
         (sends, loss), vjp_fn = jax.vjp(
             lambda p, e: fn(p, e, stage_inputs[si]), stage_params[si], ext)
+        if timing_cb:
+            # async dispatch returns before the compute runs — force it so
+            # the sample measures stage execution, not dispatch overhead
+            jax.block_until_ready((sends, loss))
+            timing_cb(si, False, time.perf_counter() - t0)
         vjps.append(vjp_fn)
         total_loss = total_loss + loss
         # transport: compress per edge (producer -> each consumer stage link)
@@ -157,7 +171,8 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
 def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
                       received: List[Dict[str, jax.Array]],
                       plan: Optional[CompressionPlan] = None,
-                      use_kernel: bool = False) -> Dict[str, Any]:
+                      use_kernel: bool = False,
+                      timing_cb: Optional[TimingCb] = None) -> Dict[str, Any]:
     """Backward sweep in reverse stage order; boundary gradients are
     compressed on the same links as their forward activations."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
@@ -177,7 +192,11 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
                 raise RuntimeError(f"missing boundary gradient for {a!r}")
             sends_cot[a] = g
         loss_cot = jnp.asarray(1.0, dtype=jnp.float32)
+        t0 = time.perf_counter() if timing_cb else 0.0
         p_cot, ext_cot = vjps[si]((sends_cot, loss_cot))
+        if timing_cb:
+            jax.block_until_ready((p_cot, ext_cot))
+            timing_cb(si, True, time.perf_counter() - t0)
         grads.update(p_cot)
         # route ext cotangents back to producers, compressed per link
         for a, g in ext_cot.items():
@@ -192,11 +211,14 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
 def pipeline_loss_and_grad(prog: PipelineProgram, params: Params,
                            inputs: Mapping[str, jax.Array],
                            plan: Optional[CompressionPlan] = None,
-                           use_kernel: bool = False
+                           use_kernel: bool = False,
+                           timing_cb: Optional[TimingCb] = None
                            ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One RAD iteration (all stages, one micro-batch)."""
-    loss, vjps, received = pipeline_forward(prog, params, inputs, plan, use_kernel)
-    grads = pipeline_backward(prog, vjps, received, plan, use_kernel)
+    loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
+                                            use_kernel, timing_cb=timing_cb)
+    grads = pipeline_backward(prog, vjps, received, plan, use_kernel,
+                              timing_cb=timing_cb)
     return loss, grads
 
 
@@ -237,7 +259,8 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
                               inputs: Mapping[str, jax.Array],
                               plan: CompressionPlan,
                               ef_state: Dict[str, jax.Array],
-                              use_kernel: bool = False
+                              use_kernel: bool = False,
+                              timing_cb: Optional[TimingCb] = None
                               ) -> Tuple[jax.Array, Dict[str, Any],
                                          Dict[str, jax.Array]]:
     """RAD iteration with error feedback on the BACKWARD (gradient) edges
@@ -253,7 +276,8 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
     # compressed below, WITH the residual memory (otherwise the custom_vjp
     # would sparsify the cotangent before EF sees it — double compression).
     loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
-                                            use_kernel, compress_bwd=False)
+                                            use_kernel, compress_bwd=False,
+                                            timing_cb=timing_cb)
     n_stages = len(prog.subdags)
     grad_mail: Dict[str, jax.Array] = {}
     grads: Dict[str, Any] = {}
@@ -262,8 +286,12 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
     for si in range(n_stages - 1, -1, -1):
         sd = prog.subdags[si]
         sends_cot = {a: grad_mail[a] for a in sd.send_acti}
+        t0 = time.perf_counter() if timing_cb else 0.0
         p_cot, ext_cot = vjps[si]((sends_cot,
                                    jnp.asarray(1.0, jnp.float32)))
+        if timing_cb:
+            jax.block_until_ready((p_cot, ext_cot))
+            timing_cb(si, True, time.perf_counter() - t0)
         grads.update(p_cot)
         for a, g in ext_cot.items():
             consumer_ops = [n for n in sd.node_names

@@ -2,17 +2,22 @@
 re-scheduling over the FusionLLM stack (beyond-paper; see README §Elastic).
 
 Composition: scripted :class:`ChurnTrace` -> lease-based
-:class:`MembershipView` + EWMA :class:`StragglerDetector` ->
-:func:`replan` (OP-Fence on the survivors, minimal migration plan) ->
-:mod:`migrate` (bit-exact state movement over the checkpoint wire format)
+:class:`MembershipView` + executor :class:`StepTiming` telemetry aggregated
+by :class:`TelemetryLog` into the EWMA :class:`StragglerDetector`'s
+observations -> :func:`replan` (OP-Fence on the survivors, minimal migration
+plan; :func:`interim_schedule` for the overlapped mode's immediate restart)
+-> :mod:`migrate` (bit-exact state movement over the checkpoint wire format)
 -> :class:`ElasticController` (drives the runtime across epochs and charges
-the discrete-event clock for detection, migration, and pipeline refill).
+the discrete-event clock for detection, blocking migration, and pipeline
+refill — background migration streams while training continues on
+bandwidth-shared links).
 """
 from .membership import (ChurnEvent, ChurnTrace, MembershipDelta,
                          MembershipView, single_failure_trace)
 from .detector import StragglerDetector
+from .telemetry import TelemetryLog
 from .replan import (MigrationPlan, OpMove, ReplanResult, diff_schedules,
-                     replan, state_bytes)
+                     interim_schedule, replan, state_bytes)
 from .migrate import (apply_moves, assert_bitexact, extract_op_state,
                       pack_op_state, trees_bitexact, unpack_op_state)
 from .controller import (ElasticController, ElasticRunResult, EpochRecord,

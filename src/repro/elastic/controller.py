@@ -4,19 +4,44 @@ One epoch = one stable OP-Fence schedule.  Per training step the controller
 (1) runs the real RAD numerics through :class:`DecentralizedRuntime` (unless
 ``train=False``), (2) advances a simulated wall-clock by the discrete-event
 :func:`simulate_iteration` on the *ground-truth* cluster (scripted slowdowns
-applied), (3) feeds observed per-stage times to the straggler detector, and
-(4) polls the lease-based membership view.  On a detected failure, join,
-straggler, or recovery it transitions epochs: re-plan via OP-Fence on the
-survivors, migrate state bit-exactly through the checkpoint wire format, and
-charge the simulated clock for what churn really costs:
+applied), (3) feeds the executor's telemetry samples through the broker's
+:class:`TelemetryLog` and hands the aggregated per-CompNode step times to
+the straggler detector — ``predict_step_times`` supplies only the detector's
+reference *prediction*, never the observation — and (4) polls the
+lease-based membership view.  On a detected failure, join, straggler, or
+recovery it transitions epochs: re-plan via OP-Fence on the survivors,
+migrate state bit-exactly through the checkpoint wire format, and charge the
+simulated clock for what churn really costs:
 
     detection delay   — implicit: the clock kept running (wasted) between the
-                        failure and its lease expiry / EWMA warm-up;
+                        failure and its lease expiry / telemetry warm-up;
     lost work         — steps after the last checkpoint that predates the
                         failure are rolled back (their samples don't count);
     migration         — bulk state transfers over the real α–β links
                         (:func:`simulate_migration`);
     pipeline refill   — a fresh schedule starts cold (fill term of Eq. 3).
+
+Two migration modes:
+
+* ``migration_mode="stop"`` (PR 1 behaviour) — training halts while the
+  whole migration plan streams, then the new schedule starts cold.
+* ``migration_mode="overlap"`` — training *continues* while survivor-to-
+  survivor state streams in the background over bandwidth-shared links
+  (:func:`repro.core.network.with_shared_links` slows the foreground
+  boundary traffic on the specific wires the stream rides, it does not block
+  it; ``overlap_bandwidth_share`` is the fraction the *foreground* keeps on
+  a contended link — default 0.75, training has priority and the stream
+  scavenges the rest).  After a failure, only the dead
+  CompNodes' shards block: they stream from the checkpoint store into an
+  *interim* schedule (:func:`repro.elastic.replan.interim_schedule` — the
+  old schedule with each dead segment merged into an adjacent surviving
+  stage), training resumes on it, and the cut-over to the final re-planned
+  schedule charges only the residual transfer (a hot hand-off between warm
+  schedules — no second cold fill).  A broker-side cost model streams only
+  when the target's pace pays for the foreground slowdown within
+  ``amortize_steps``; otherwise the interim schedule simply becomes the
+  epoch's schedule (fair-share conservation: bytes crossing the pipeline's
+  own bottleneck wire cannot be hidden by overlapping).
 
 Determinism contract: same graph/cluster/trace/seeds → identical epochs,
 schedules, clocks, and (when training) identical losses.
@@ -29,9 +54,10 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 from repro.checkpoint import deserialize_state, serialize_state
 from repro.core.compression import CompressionPlan, plan_none
 from repro.core.estimator import ClusterSpec, predict_step_times
-from repro.core.executor import (DecentralizedRuntime, pipeline_fill_seconds,
-                                 simulate_iteration)
-from repro.core.network import with_slowdowns
+from repro.core.executor import (DecentralizedRuntime, TelemetrySink,
+                                 pipeline_fill_seconds, simulate_iteration,
+                                 simulate_migration)
+from repro.core.network import with_shared_links, with_slowdowns
 from repro.core.opgraph import OpGraph, OpProfile
 from repro.core.scheduler import Schedule, schedule_opfence
 from repro.optim.optimizers import Optimizer
@@ -39,7 +65,9 @@ from repro.optim.optimizers import Optimizer
 from .detector import StragglerDetector
 from .membership import ChurnEvent, ChurnTrace, MembershipView
 from .migrate import apply_moves, assert_bitexact
-from .replan import MigrationPlan, ReplanResult, replan
+from .replan import (MigrationPlan, OpMove, ReplanResult, _group_transfers,
+                     diff_schedules, interim_schedule, replan)
+from .telemetry import TelemetryLog
 
 PlanFactory = Callable[[OpGraph, Mapping[str, OpProfile], ClusterSpec,
                         Mapping[str, int]], CompressionPlan]
@@ -53,6 +81,7 @@ class StepRecord:
     step_seconds: float        # simulated iteration wall-clock
     clock: float               # cumulative simulated time at step end
     lost: bool = False         # rolled back by a later failure
+    overlapping: bool = False  # executed while a background migration ran
 
 
 @dataclasses.dataclass
@@ -60,17 +89,20 @@ class EpochRecord:
     epoch: int
     at_step: int               # first data step executed under this epoch
     clock: float               # sim time when the epoch began
-    cause: str                 # initial | failure | join | straggler | recovery
+    cause: str                 # initial | failure | join | straggler |
+                               # recovery | cutover
     events: List[ChurnEvent]
     alive: List[int]
     stage_devices: List[int]
     n_moves: int
     moved_bytes: float
     detect_seconds: float      # event time -> broker noticing
-    migrate_seconds: float
+    migrate_seconds: float     # blocking (foreground) migration wall-clock
     refill_seconds: float
     rollback_steps: int
-    replan_mode: str = ""      # auto-chosen candidate: full | anchored
+    replan_mode: str = ""      # full | anchored | interim
+    background_bytes: float = 0.0   # streamed while training continued
+    overlap_seconds: float = 0.0    # trained wall-clock during the stream
 
 
 @dataclasses.dataclass
@@ -96,12 +128,39 @@ class ElasticRunResult:
             return float("inf")
         return self.useful_steps * batch_size / self.total_seconds
 
+    def post_failure_throughput(self, batch_size: int) -> float:
+        """Useful samples per second in the window after the first failure
+        epoch began — the recovery-path metric overlapped migration targets.
+        inf when no failure occurred."""
+        fails = [e for e in self.epochs if e.cause == "failure"]
+        if not fails:
+            return float("inf")
+        t0 = fails[0].clock - fails[0].migrate_seconds \
+            - fails[0].refill_seconds
+        useful = sum(1 for r in self.steps
+                     if not r.lost and r.clock > t0)
+        window = self.total_seconds - t0
+        return useful * batch_size / window if window > 0 else float("inf")
+
 
 @dataclasses.dataclass
 class _Checkpoint:
     step: int                  # state AFTER this many data steps
     clock: float               # sim time when taken
     blob: Optional[bytes]      # None in sim-only mode
+
+
+@dataclasses.dataclass
+class _OverlapState:
+    """Background migration in flight: the target schedule and its bulk
+    transfers, draining while foreground training continues."""
+
+    target: Schedule
+    replan_mode: str
+    moves: List[OpMove]
+    bg_seconds: float          # total stream time at shared bandwidth
+    busy: Tuple[Tuple[int, int], ...]   # links the stream contends on
+    progressed: float = 0.0
 
 
 class ElasticController:
@@ -118,11 +177,17 @@ class ElasticController:
                  detector_alpha: float = 0.4,
                  detector_threshold: float = 1.8,
                  detector_min_obs: int = 3,
+                 telemetry_window: int = 5,
+                 telemetry_mad_k: float = 3.5,
                  opt_state_mult: float = 2.0,
                  replan_mode: str = "auto",
                  amortize_steps: float = 100.0,
+                 migration_mode: str = "stop",
+                 overlap_bandwidth_share: float = 0.75,
                  use_kernel: bool = False,
                  initial_alive: Optional[Sequence[int]] = None):
+        if migration_mode not in ("stop", "overlap"):
+            raise ValueError(f"unknown migration_mode {migration_mode!r}")
         self.graph = graph
         self.profiles = profiles
         self.base_cluster = cluster
@@ -136,10 +201,14 @@ class ElasticController:
         self.opt_state_mult = float(opt_state_mult)
         self.replan_mode = replan_mode
         self.amortize_steps = float(amortize_steps)
+        self.migration_mode = migration_mode
+        self.overlap_bandwidth_share = float(overlap_bandwidth_share)
         self.use_kernel = use_kernel
         self._det_cfg = dict(alpha=detector_alpha,
                              threshold=detector_threshold,
                              min_observations=detector_min_obs)
+        self.telemetry = TelemetryLog(window=telemetry_window,
+                                      mad_k=telemetry_mad_k)
 
         self.membership = MembershipView(len(cluster), trace, lease_s=lease_s,
                                          initial_alive=initial_alive)
@@ -147,9 +216,12 @@ class ElasticController:
         self.epoch_records: List[EpochRecord] = []
         self.step_records: List[StepRecord] = []
         self.clock = 0.0
+        self._migrating: Optional[_OverlapState] = None
+        self._deferred_deltas: List[Any] = []   # ripened during a stream
         self._install_schedule(cause="initial", events=[], dead=[],
                                at_step=0, detect_seconds=0.0,
-                               migration=None, rollback_steps=0)
+                               migration=None, rollback_steps=0,
+                               charge_refill=False)
 
     # ----------------------------------------------------------- topology --
     def believed_cluster(self) -> ClusterSpec:
@@ -168,26 +240,33 @@ class ElasticController:
                           detect_seconds: float,
                           migration: Optional[MigrationPlan],
                           rollback_steps: int,
-                          replan_mode: str = "") -> None:
+                          replan_mode: str = "",
+                          schedule: Optional[Schedule] = None,
+                          migrate_seconds: Optional[float] = None,
+                          charge_refill: bool = True,
+                          background_bytes: float = 0.0,
+                          overlap_seconds: float = 0.0) -> None:
         believed = self.believed_cluster()
-        if migration is None:     # initial epoch: schedule from scratch
+        if schedule is not None:
+            self.schedule = schedule
+        elif migration is None:   # initial epoch: schedule from scratch
             self.schedule = schedule_opfence(
                 self.graph, self.profiles, believed, seed=self.seed,
                 device_subset=self.membership.alive)
         placement = self.schedule.placement
         self.plan = self.plan_factory(self.graph, self.profiles, believed,
                                       placement)
-        if migration is None:
-            migrate_s = refill_s = 0.0
-            n_moves, moved_bytes = 0, 0.0
-        else:
-            migrate_s = migration.seconds
-            n_moves, moved_bytes = len(migration.moves), migration.total_bytes
-            refill_s = pipeline_fill_seconds(self.graph, self.profiles,
-                                             self.schedule,
-                                             self.true_cluster(), self.plan)
-            self.clock += migrate_s + refill_s
+        migrate_s = migration.seconds if migration is not None else 0.0
+        if migrate_seconds is not None:   # caller-computed blocking cost
+            migrate_s = migrate_seconds
+        n_moves = len(migration.moves) if migration is not None else 0
+        moved_bytes = migration.total_bytes if migration is not None else 0.0
+        refill_s = pipeline_fill_seconds(
+            self.graph, self.profiles, self.schedule,
+            self.true_cluster(), self.plan) if charge_refill else 0.0
+        self.clock += migrate_s + refill_s
         self._obs_cache = None
+        self.telemetry.clear()   # a new schedule invalidates old samples
         self.runtime = DecentralizedRuntime(self.graph, self.schedule,
                                             self.plan,
                                             use_kernel=self.use_kernel)
@@ -203,7 +282,8 @@ class ElasticController:
             n_moves=n_moves, moved_bytes=moved_bytes,
             detect_seconds=detect_seconds, migrate_seconds=migrate_s,
             refill_seconds=refill_s, rollback_steps=rollback_steps,
-            replan_mode=replan_mode))
+            replan_mode=replan_mode, background_bytes=background_bytes,
+            overlap_seconds=overlap_seconds))
 
     @property
     def epoch(self) -> int:
@@ -237,14 +317,15 @@ class ElasticController:
                 params, opt_state = self.optimizer.update(grads, opt_state,
                                                           params)
                 loss_val = float(loss)
-            sim_time, observed = self._step_timing()
+            sim_time = self._step_timing(step)
             self.clock += sim_time
             step += 1
             self.step_records.append(StepRecord(
                 step=step, epoch=self.epoch, loss=loss_val,
-                step_seconds=sim_time, clock=self.clock))
-            # a degraded node shows up as observed step time > prediction
-            self.detector.observe(observed)
+                step_seconds=sim_time, clock=self.clock,
+                overlapping=self._migrating is not None))
+            # a degraded node shows up as aggregated telemetry > prediction
+            self.detector.observe(self.telemetry.node_step_times())
             if step % self.checkpoint_interval == 0:
                 ckpts.append(_Checkpoint(
                     step=step, clock=self.clock,
@@ -252,7 +333,34 @@ class ElasticController:
                     else None))
                 del ckpts[:-self.checkpoint_history]
 
-            transition = self._pending_transition()
+            transition = None
+            if self._migrating is not None:
+                self._migrating.progressed += sim_time
+                if self._migrating.progressed >= self._migrating.bg_seconds:
+                    params, opt_state = self._cutover(
+                        params, opt_state, train, residual=0.0, at_step=step)
+                else:
+                    # a membership change mid-stream forces the cut-over
+                    # (residual charged blocking), then is handled normally;
+                    # recover announcements that ripen mid-stream are
+                    # deferred for the next _pending_transition poll
+                    deltas = self.membership.poll(self.clock)
+                    self._deferred_deltas.extend(
+                        d for d in deltas if d.event.kind == "recover")
+                    member = [d for d in deltas
+                              if d.event.kind in ("leave", "join")]
+                    if member:
+                        residual = (self._migrating.bg_seconds
+                                    - self._migrating.progressed)
+                        params, opt_state = self._cutover(
+                            params, opt_state, train, residual=residual,
+                            at_step=step)
+                        cause = "failure" if any(
+                            d.event.kind == "leave" for d in member) \
+                            else "join"
+                        transition = (cause, member)
+            else:
+                transition = self._pending_transition()
             if transition is None:
                 continue
             cause, deltas = transition
@@ -287,47 +395,183 @@ class ElasticController:
 
             joined = [d.event.node for d in deltas if d.event.kind == "join"]
             rp = self._replan(dead, joined)
-            if train:
-                live = [m for m in rp.migration.moves
-                        if not m.from_checkpoint]
-                before = params
-                out = apply_moves(params, opt_state, live)
-                assert_bitexact(before, out.params, "migrated params")
-                params, opt_state = out.params, out.opt_state
-            self.schedule = rp.schedule
-            self._install_schedule(cause=cause,
-                                   events=[d.event for d in deltas],
-                                   dead=dead, at_step=step,
-                                   detect_seconds=detect_s,
-                                   migration=rp.migration,
-                                   rollback_steps=rollback_steps,
-                                   replan_mode=rp.mode)
+            if self.migration_mode == "overlap":
+                self._begin_overlap(rp, cause=cause,
+                                    events=[d.event for d in deltas],
+                                    dead=dead, at_step=step,
+                                    detect_seconds=detect_s,
+                                    rollback_steps=rollback_steps)
+            else:
+                if train:
+                    live = [m for m in rp.migration.moves
+                            if not m.from_checkpoint]
+                    before = params
+                    out = apply_moves(params, opt_state, live)
+                    assert_bitexact(before, out.params, "migrated params")
+                    params, opt_state = out.params, out.opt_state
+                self._install_schedule(cause=cause,
+                                       events=[d.event for d in deltas],
+                                       dead=dead, at_step=step,
+                                       detect_seconds=detect_s,
+                                       migration=rp.migration,
+                                       rollback_steps=rollback_steps,
+                                       replan_mode=rp.mode,
+                                       schedule=rp.schedule)
         return ElasticRunResult(steps=self.step_records,
                                 epochs=self.epoch_records,
                                 params=params, opt_state=opt_state,
                                 total_seconds=self.clock)
 
-    def _step_timing(self) -> Tuple[float, Dict[int, float]]:
-        """(simulated iteration seconds, observed per-stage times) under the
-        ground-truth cluster.  Both are pure functions of (schedule, true
-        slowdowns), which only change at churn events or re-plans — cached
-        so the per-step hot loop skips the estimator sweeps."""
-        key = tuple(sorted(self.membership.slow_factor.items()))
-        if self._obs_cache is not None and self._obs_cache[0] == key:
-            return self._obs_cache[1], self._obs_cache[2]
-        true_cl = self.true_cluster()
-        sim = simulate_iteration(self.graph, self.profiles, self.schedule,
-                                 true_cl, self.plan, n_micro=self.n_micro)
-        observed = predict_step_times(self.graph, self.profiles, true_cl,
-                                      self.schedule.placement)
-        self._obs_cache = (key, sim.iteration_time, observed)
-        return sim.iteration_time, observed
+    # --------------------------------------------------- overlap machinery --
+    def _begin_overlap(self, rp: ReplanResult, cause: str,
+                       events: List[ChurnEvent], dead: Sequence[int],
+                       at_step: int, detect_seconds: float,
+                       rollback_steps: int) -> None:
+        """Start an overlapped migration toward ``rp.schedule``.
+
+        Blocking phase (foreground, training stopped): only the dead
+        CompNodes' shards, streamed from the checkpoint store into the
+        interim schedule's hosts.  Everything else drains in the background
+        while training continues on the interim (or unchanged old) schedule
+        over bandwidth-shared links; `_cutover` finishes the epoch change.
+
+        Stream-vs-keep decision: streaming only pays when the target's
+        steady-state pace covers the foreground slowdown during the stream
+        within ``amortize_steps`` — fair-share conservation means bytes
+        crossing the pipeline's own bottleneck wire cannot be hidden, so a
+        pace-equivalent target is not worth migrating to at all and the
+        interim schedule simply becomes the epoch's schedule
+        (``replan_mode="interim-final"``).
+        """
+        old = self.schedule
+        believed = self.believed_cluster()
+        dead_with_ops = [d for d in dead if old.assignment[d]]
+        if dead_with_ops:
+            interim = interim_schedule(self.graph, old, dead,
+                                       len(self.base_cluster))
+            if interim is None:
+                raise RuntimeError("no surviving stage to host the interim "
+                                   "schedule")
+            # only the dead segments differ between old and interim, so the
+            # diff is exactly the blocking checkpoint-restore set
+            blocking = diff_schedules(old, interim, self.profiles, dead=dead,
+                                      opt_state_mult=self.opt_state_mult)
+            migration = MigrationPlan(
+                moves=blocking,
+                sim=simulate_migration(_group_transfers(blocking), believed))
+            charge_refill = True          # rollback left the pipeline cold
+        else:
+            interim = old                 # pipeline keeps running warm
+            migration, charge_refill = None, False
+
+        moves = diff_schedules(interim, rp.schedule, self.profiles,
+                               dead=(), opt_state_mult=self.opt_state_mult)
+        stream = None
+        if moves:
+            bg_sim = simulate_migration(
+                _group_transfers(moves), believed,
+                bandwidth_fraction=1.0 - self.overlap_bandwidth_share)
+            # the stream contends per link: only the wires it actually
+            # rides slow the foreground (a bulk flow on a fast intra-cluster
+            # link must not throttle the WAN edge bounding the pipeline)
+            busy = tuple(sorted({(m.src, m.dst) for m in moves
+                                 if m.src is not None}))
+            if self._stream_pays_off(interim, rp.schedule, believed, busy,
+                                     bg_sim.seconds):
+                stream = _OverlapState(
+                    target=rp.schedule, replan_mode=rp.mode, moves=moves,
+                    bg_seconds=bg_sim.seconds, busy=busy)
+        self._install_schedule(
+            cause=cause, events=events, dead=dead, at_step=at_step,
+            detect_seconds=detect_seconds, migration=migration,
+            rollback_steps=rollback_steps,
+            replan_mode="interim" if stream is not None else "interim-final",
+            schedule=interim, charge_refill=charge_refill)
+        self._migrating = stream
+        self._obs_cache = None   # foreground now runs on shared links
+
+    def _stream_pays_off(self, interim: Schedule, target: Schedule,
+                         believed: ClusterSpec,
+                         busy: Tuple[Tuple[int, int], ...],
+                         bg_seconds: float) -> bool:
+        """Broker-side cost model (on the believed topology): stream when
+        ``slowdown_waste + amortize_steps · pace(target)`` beats
+        ``amortize_steps · pace(interim)``."""
+        def pace(schedule: Schedule, cluster: ClusterSpec) -> float:
+            plan = self.plan_factory(self.graph, self.profiles, believed,
+                                     schedule.placement)
+            return simulate_iteration(self.graph, self.profiles, schedule,
+                                      cluster, plan,
+                                      n_micro=self.n_micro).iteration_time
+
+        t_interim = pace(interim, believed)
+        t_target = pace(target, believed)
+        t_shared = pace(interim, with_shared_links(
+            believed, busy, self.overlap_bandwidth_share))
+        n_stream_steps = bg_seconds / max(t_shared, 1e-12)
+        waste = n_stream_steps * (t_shared - t_interim)
+        return (waste + self.amortize_steps * t_target
+                < self.amortize_steps * t_interim)
+
+    def _cutover(self, params: Any, opt_state: Any, train: bool,
+                 residual: float, at_step: int) -> Tuple[Any, Any]:
+        """Finish an overlapped migration: charge the residual stream time
+        (blocking), install the target schedule, and apply the background
+        moves bit-exactly.
+
+        No refill is charged here: a cut-over is a *hot* hand-off between
+        two warm schedules at a step boundary, and the per-step simulator
+        already replays a full GPipe fill+drain every iteration — unlike the
+        blocking path, where the whole pipeline sat empty during the stall.
+        """
+        mig = self._migrating
+        self._migrating = None
+        if train:
+            before = params
+            out = apply_moves(params, opt_state, mig.moves)
+            assert_bitexact(before, out.params, "migrated params")
+            params, opt_state = out.params, out.opt_state
+        self._install_schedule(
+            cause="cutover", events=[], dead=[], at_step=at_step,
+            detect_seconds=0.0,
+            migration=MigrationPlan(moves=mig.moves, sim=simulate_migration(
+                {}, self.base_cluster)),
+            rollback_steps=0, replan_mode=mig.replan_mode,
+            schedule=mig.target, migrate_seconds=residual,
+            charge_refill=False,
+            background_bytes=float(sum(m.nbytes for m in mig.moves)),
+            overlap_seconds=min(mig.progressed, mig.bg_seconds))
+        return params, opt_state
+
+    def _step_timing(self, step: int) -> float:
+        """Simulated iteration seconds under the ground-truth cluster (shared
+        links while a background migration streams).  The simulator's
+        per-stage StepTiming samples are recorded into the broker telemetry,
+        stamped with the data step.  Pure function of (schedule, true
+        slowdowns, background-busy set), which only change at churn events
+        or re-plans — cached so the per-step hot loop skips the sweeps."""
+        busy = self._migrating.busy if self._migrating is not None else ()
+        key = (tuple(sorted(self.membership.slow_factor.items())), busy)
+        if self._obs_cache is None or self._obs_cache[0] != key:
+            true_cl = self.true_cluster()
+            if busy:
+                true_cl = with_shared_links(
+                    true_cl, busy, self.overlap_bandwidth_share)
+            sink = TelemetrySink()
+            sim = simulate_iteration(self.graph, self.profiles, self.schedule,
+                                     true_cl, self.plan,
+                                     n_micro=self.n_micro, telemetry=sink)
+            self._obs_cache = (key, sim.iteration_time, sink.samples)
+        _, sim_time, samples = self._obs_cache
+        self.telemetry.record_step(samples, step=step)
+        return sim_time
 
     # ------------------------------------------------------- transitions ---
     def _pending_transition(self):
         """Poll membership + detector; decide whether an epoch change is due.
         Returns (cause, deltas) or None."""
-        deltas = self.membership.poll(self.clock)
+        deltas = self._deferred_deltas + self.membership.poll(self.clock)
+        self._deferred_deltas = []
         member_deltas = [d for d in deltas
                          if d.event.kind in ("leave", "join")]
         if member_deltas:

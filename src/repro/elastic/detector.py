@@ -2,16 +2,20 @@
 
 The paper names stragglers as a core challenge of geo-distributed training
 (§1) but schedules once and hopes; here the broker keeps watching.  Each
-pipeline stage's observed per-step wall-clock is smoothed with an EWMA and
-compared to the workload estimator's prediction for that CompNode
-(:func:`repro.core.estimator.predict_step_times`).  A node whose smoothed
-time drifts past ``threshold ×`` its prediction is flagged; the controller
-then degrades the node's believed λ_p and re-plans, so OP-Fence shifts ops
-off the straggler in proportion to the measured slowdown.
+pipeline stage's *measured* per-step time — executor StepTiming samples
+aggregated by :class:`repro.elastic.telemetry.TelemetryLog` (median-of-
+window, outlier-rejected), never a fresh estimator sweep — is smoothed with
+an EWMA and compared to the workload estimator's *prediction* for that
+CompNode (:func:`repro.core.estimator.predict_step_times`, the reference
+the schedule was built against).  A node whose smoothed time drifts past
+``threshold ×`` its prediction is flagged; the controller then degrades the
+node's believed λ_p and re-plans, so OP-Fence shifts ops off the straggler
+in proportion to the measured slowdown.
 
 Detection delay is explicit: ``min_observations`` steps must accumulate
-before a flag fires, which the simulator charges as wall-clock (the cost of
-noticing, on top of the cost of migrating).
+before a flag fires (on top of the telemetry window's own lag), which the
+simulator charges as wall-clock (the cost of noticing, on top of the cost
+of migrating).
 """
 from __future__ import annotations
 

@@ -16,6 +16,12 @@ accumulators each keyed per-op (AdamW's ``{"m": {op: ...}, "v": ...}``);
 Migration payloads are deliberately exempt from AdaTopK: Top-K loss on a
 boundary activation is absorbed by training, Top-K loss on the weights
 themselves is corruption.
+
+Both migration modes go through :func:`apply_moves`: stop-the-world applies
+the whole plan at once; overlapped migration applies the blocking
+(checkpoint-restore) moves implicitly via the rollback restore, then the
+background survivor moves at cut-over — in either case the wire round-trip
+is bit-exact, so a loss curve is continuous across the hand-off.
 """
 from __future__ import annotations
 

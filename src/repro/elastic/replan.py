@@ -109,6 +109,40 @@ def _group_transfers(moves: Sequence[OpMove]
     return out
 
 
+def interim_schedule(graph: OpGraph, old: Schedule, dead: Sequence[int],
+                     n_devices: int) -> Optional[Schedule]:
+    """Cheapest runnable schedule after a failure (overlapped migration).
+
+    The old schedule with each dead stage's op segment merged into an
+    adjacent *surviving* stage (the predecessor when one exists, else the
+    first survivor downstream).  Segments are contiguous chain runs in stage
+    order, so merging a run into its neighbour keeps every stage's sub-DAG
+    connected.  Only the dead segments' state must stream in (from the
+    broker's checkpoint store) before training resumes on this schedule;
+    every other op stays put — the rest of the re-plan drains in the
+    background.  Returns None when no stage survives.
+    """
+    dead_set = {int(d) for d in dead}
+    out_devs: List[int] = []
+    out_segs: List[List[str]] = []
+    pending: List[str] = []    # dead segments preceding the first survivor
+    for dev in old.stage_devices():
+        seg = list(old.assignment[dev])
+        if dev in dead_set:
+            if out_segs:
+                out_segs[-1].extend(seg)
+            else:
+                pending.extend(seg)
+        else:
+            out_devs.append(dev)
+            out_segs.append(pending + seg)
+            pending = []
+    if not out_devs:
+        return None
+    a, s = _to_full_assignment(out_segs, out_devs, n_devices)
+    return Schedule(assignment=a, stages=s, clusters=old.clusters)
+
+
 def _anchored_schedule(graph: OpGraph, profiles: Mapping[str, OpProfile],
                        cluster: ClusterSpec, old_schedule: Schedule,
                        alive: Sequence[int], joined: Sequence[int],

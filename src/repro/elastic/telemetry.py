@@ -1,0 +1,148 @@
+"""Broker-side timing telemetry (elastic runtime).
+
+PR 1's straggler detector was fed ``predict_step_times`` evaluated on the
+*ground-truth* cluster — i.e. the broker observed its own estimator, not the
+system.  This module closes the loop on measured pace: the executors emit
+per-stage, per-micro-batch :class:`repro.core.executor.StepTiming` samples
+(`simulate_iteration` stamps simulated seconds; ``DecentralizedRuntime``
+stamps measured host wall-clock), and the broker's :class:`TelemetryLog`
+aggregates them into the per-CompNode step times that
+:meth:`repro.elastic.detector.StragglerDetector.observe` consumes.
+
+Aggregation is deliberately robust, because real volunteer timings are
+noisy (GC pauses, page faults, transient congestion):
+
+* per step, a node's samples are folded into one FP+BP seconds value per
+  micro-batch (``Σ samples / n_micro`` — the unit ``predict_step_times``
+  predicts);
+* across the last ``window`` steps, outliers are rejected by the
+  median-absolute-deviation rule (|x − median| > k·MAD) and the median of
+  the survivors is reported.
+
+A single spiked step therefore cannot flag a healthy node (tested), while a
+genuine slowdown shifts the whole window and surfaces within ``window``
+steps.  ``predict_step_times`` remains the detector's reference *prediction*
+only — the observation path is telemetry, end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.executor import StepTiming
+
+
+def _robust_window_stat(values: Sequence[float], mad_k: float) -> float:
+    """Median of the window after MAD outlier rejection.
+
+    With < 3 samples there is nothing to reject against — return the plain
+    median.  MAD of 0 (constant window) keeps only exact-median samples,
+    which is the correct degenerate behaviour: one spike in an otherwise
+    constant window is rejected outright.
+    """
+    x = np.asarray(values, dtype=np.float64)
+    if x.size < 3:
+        return float(np.median(x))
+    med = float(np.median(x))
+    mad = float(np.median(np.abs(x - med)))
+    keep = np.abs(x - med) <= mad_k * mad
+    if not np.any(keep):
+        return med
+    return float(np.median(x[keep]))
+
+
+@dataclasses.dataclass
+class _NodeSeries:
+    """Per-node history: one aggregated seconds value per observed step."""
+
+    steps: List[int] = dataclasses.field(default_factory=list)
+    seconds: List[float] = dataclasses.field(default_factory=list)
+
+
+class TelemetryLog:
+    """Sliding-window aggregator from raw StepTiming samples to the
+    per-CompNode step times the straggler detector observes.
+
+    ``record`` accepts samples in any order within a step; ``node_step_times``
+    reports, per node, the robust (median-of-window, MAD outlier-rejected)
+    per-micro-batch FP+BP seconds over the last ``window`` distinct steps.
+    ``record_step`` bulk-records a list of samples re-stamped to one step —
+    the controller's path for cached simulator samples.
+    """
+
+    def __init__(self, window: int = 5, mad_k: float = 3.5,
+                 history_steps: int = 64):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self.mad_k = float(mad_k)
+        self.history_steps = max(int(history_steps), self.window)
+        # (node, step) -> [total seconds, set of micro-batch indices]
+        self._acc: Dict[Tuple[int, int], List] = {}
+        self._series: Dict[int, _NodeSeries] = {}
+        self.n_samples = 0
+
+    # ------------------------------------------------------------ recording
+    def record(self, sample: StepTiming) -> None:
+        key = (int(sample.node), int(sample.step))
+        slot = self._acc.get(key)
+        if slot is None:
+            slot = self._acc[key] = [0.0, set()]
+        slot[0] += float(sample.seconds)
+        slot[1].add((int(sample.micro_batch)))
+        self.n_samples += 1
+        self._fold(key, slot)
+
+    def record_step(self, samples: Iterable[StepTiming], step: int) -> None:
+        for s in samples:
+            self.record(dataclasses.replace(s, step=step))
+
+    def _fold(self, key: Tuple[int, int], slot: List) -> None:
+        """Fold the (node, step) accumulator into the node's series: total
+        seconds normalized per micro-batch (the estimator's prediction unit).
+        Idempotent per step — later samples for the same step update the
+        entry in place."""
+        node, step = key
+        per_mb = slot[0] / max(1, len(slot[1]))
+        series = self._series.setdefault(node, _NodeSeries())
+        if series.steps and series.steps[-1] == step:
+            series.seconds[-1] = per_mb
+        else:
+            series.steps.append(step)
+            series.seconds.append(per_mb)
+            if len(series.steps) > self.history_steps:
+                del series.steps[:-self.history_steps]
+                del series.seconds[:-self.history_steps]
+        # accumulators for steps that scrolled out of history are dropped
+        if len(self._acc) > 4 * self.history_steps * max(1, len(self._series)):
+            horizon = step - self.history_steps
+            self._acc = {k: v for k, v in self._acc.items()
+                         if k[1] >= horizon}
+
+    # ----------------------------------------------------------- aggregates
+    def nodes(self) -> List[int]:
+        return sorted(self._series)
+
+    def node_step_times(self) -> Dict[int, float]:
+        """Per-node robust step seconds over the aggregation window — the
+        mapping ``StragglerDetector.observe`` consumes."""
+        out: Dict[int, float] = {}
+        for node, series in self._series.items():
+            if not series.seconds:
+                continue
+            out[node] = _robust_window_stat(series.seconds[-self.window:],
+                                            self.mad_k)
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = [s.steps[-1] for s in self._series.values() if s.steps]
+        return max(steps) if steps else None
+
+    def clear(self) -> None:
+        """Drop all history — called at every re-plan: a new schedule changes
+        every stage's expected time, so old samples must not carry over."""
+        self._acc.clear()
+        self._series.clear()
+        self.n_samples = 0

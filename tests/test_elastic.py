@@ -12,8 +12,8 @@ from repro.core.executor import simulate_migration
 from repro.core.scheduler import schedule_opfence
 from repro.elastic import (ChurnEvent, ChurnTrace, ElasticController,
                            MembershipView, StragglerDetector, apply_moves,
-                           diff_schedules, replan, single_failure_trace,
-                           trees_bitexact)
+                           diff_schedules, interim_schedule, replan,
+                           single_failure_trace, trees_bitexact)
 from repro.optim.optimizers import adamw, sgd
 from helpers import mlp_chain
 
@@ -326,6 +326,225 @@ def test_join_triggers_replan_and_uses_new_node():
     joins = [e for e in res.epochs if e.cause == "join"]
     assert len(joins) == 1 and 4 in joins[0].alive
     assert joins[0].rollback_steps == 0    # joins never lose work
+
+
+def test_controller_detector_consumes_telemetry_only():
+    """The detector's observation path is executor telemetry end to end:
+    samples flow, and the flagged severity equals the telemetry aggregate
+    over prediction — not a fresh estimator sweep."""
+    g, prof, cluster, _, _ = _mlp_setup()
+    ctrl = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    ctrl.run(steps=4)
+    assert ctrl.telemetry.n_samples > 0
+    agg = ctrl.telemetry.node_step_times()
+    for d, st in ctrl.detector.stats.items():
+        if st.ewma is not None and d in agg:
+            assert st.ewma == pytest.approx(agg[d], rel=1e-9, abs=1e-15)
+
+
+# ------------------------------------------------------ overlapped recovery --
+def test_interim_schedule_merges_dead_segment_into_neighbor():
+    g, prof, cluster, _, _ = _mlp_setup(n_layers=12, n_dev=6)
+    old = schedule_opfence(g, prof, cluster)
+    devs = old.stage_devices()
+    victim = devs[2]
+    interim = interim_schedule(g, old, [victim], len(cluster))
+    assert interim.assignment[victim] == []
+    # every op still assigned exactly once; dead ops land on the predecessor
+    placed = [op for seg in interim.assignment for op in seg]
+    assert sorted(placed) == sorted(g.nodes)
+    assert interim.stage_devices() == [d for d in devs if d != victim]
+    for op in old.assignment[victim]:
+        assert interim.placement[op] == devs[1]
+    # survivors keep their own ops (nothing else moved)
+    for d in devs:
+        if d in (victim, devs[1]):
+            continue
+        assert interim.assignment[d] == old.assignment[d]
+    # stages stay contiguous chain runs => valid pipeline sub-DAGs
+    order = {op: i for i, op in enumerate(chain(g))}
+    for seg in interim.assignment:
+        idx = sorted(order[op] for op in seg if op in order)
+        assert idx == list(range(idx[0], idx[0] + len(idx))) if idx else True
+    interim.pipeline_subdags(g)
+    # leading-stage death folds into the first survivor instead
+    interim0 = interim_schedule(g, old, [devs[0]], len(cluster))
+    for op in old.assignment[devs[0]]:
+        assert interim0.placement[op] == devs[1]
+    assert interim_schedule(g, old, list(devs), len(cluster)) is None
+
+
+def _overlap_setup(n_layers=10, d=64, n_dev=6, seed=3):
+    g, shapes, params, inputs = mlp_chain(n_layers=n_layers, d=d, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.geo_random(n=n_dev, n_sites=2, seed=seed)
+    return g, prof, cluster, params, inputs
+
+
+def _compute_bound_lan(n_layers=12, d=512, lam=1e-6):
+    """Slow devices on a fast LAN: the merged interim stage is the pipeline
+    bottleneck, so the re-planned target is clearly faster and the cost
+    model streams the survivor bulk — the regime the background-stream
+    machinery exists for."""
+    g, shapes, _, _ = mlp_chain(n_layers=n_layers, d=d, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.with_slowdowns(
+        network.homogeneous_lan(n=6, bandwidth_Bps=12.5e6, alpha=1e-4),
+        {i: lam for i in range(6)})
+    return g, prof, cluster
+
+
+def test_overlap_mode_charges_only_blocking_migration():
+    """Overlap accounting: the failure epoch charges only the dead shard's
+    checkpoint stream + interim refill; the survivor bulk lands on the
+    cutover epoch as background bytes, with no second cold fill (hot
+    hand-off)."""
+    g, prof, cluster = _compute_bound_lan()
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[1]
+    trace = single_failure_trace(victim, at=2.5 * t1)
+    ctrl = ElasticController(g, prof, cluster, trace, n_micro=2, lease_s=t1,
+                             migration_mode="overlap")
+    res = ctrl.run(steps=30)
+    causes = [e.cause for e in res.epochs]
+    assert "failure" in causes
+    fail = res.epochs[causes.index("failure")]
+    assert fail.replan_mode == "interim"     # cost model chose to stream
+    assert fail.migrate_seconds > 0          # checkpoint stream blocks
+    assert fail.refill_seconds > 0           # interim pipeline starts cold
+    assert fail.rollback_steps >= 1
+    assert "cutover" in causes               # stream finished within the run
+    cut = res.epochs[causes.index("cutover")]
+    assert cut.background_bytes > 0
+    assert cut.overlap_seconds > 0
+    assert cut.refill_seconds == 0.0         # hot hand-off, no cold fill
+    assert cut.replan_mode in ("full", "anchored")
+    # steps executed while the background stream drained are marked
+    assert any(s.overlapping for s in res.steps)
+
+
+def test_overlap_keeps_interim_when_stream_cannot_pay_off():
+    """Fair-share conservation: on the comm-dominated geo toy the re-planned
+    schedule is no faster than the interim, so streaming the survivor bulk
+    buys nothing — the cost model keeps the interim schedule outright."""
+    g, prof, cluster, _, _ = _overlap_setup()
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[1]
+    ctrl = ElasticController(g, prof, cluster,
+                             single_failure_trace(victim, at=2.5 * t1),
+                             n_micro=2, lease_s=t1, migration_mode="overlap")
+    res = ctrl.run(steps=20)
+    causes = [e.cause for e in res.epochs]
+    fail = res.epochs[causes.index("failure")]
+    assert fail.replan_mode == "interim-final"
+    assert "cutover" not in causes
+    assert not any(s.overlapping for s in res.steps)
+    assert ctrl.schedule.assignment[victim] == []
+
+
+def test_overlap_determinism():
+    g, prof, cluster, _, _ = _overlap_setup()
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    dev = probe.schedule.stage_devices()
+    trace = ChurnTrace((
+        ChurnEvent(time=1.2 * t1, kind="slowdown", node=dev[0], factor=0.2),
+        ChurnEvent(time=6.0 * t1, kind="leave", node=dev[1]),
+    ))
+    runs = []
+    for _ in range(2):
+        ctrl = ElasticController(g, prof, cluster, trace, n_micro=2,
+                                 lease_s=t1, migration_mode="overlap")
+        runs.append(ctrl.run(steps=25))
+    a, b = runs
+    assert [(e.cause, e.at_step, e.alive, e.stage_devices, e.clock,
+             e.background_bytes) for e in a.epochs] == \
+           [(e.cause, e.at_step, e.alive, e.stage_devices, e.clock,
+             e.background_bytes) for e in b.epochs]
+    assert [(s.step, s.clock, s.lost, s.overlapping) for s in a.steps] == \
+           [(s.step, s.clock, s.lost, s.overlapping) for s in b.steps]
+
+
+def test_overlap_beats_stop_the_world_after_failure():
+    """The point of overlapping: post-failure throughput strictly improves
+    because survivor state streams while training continues instead of
+    stalling the whole swarm."""
+    g, shapes, _, _ = mlp_chain(n_layers=12, d=128, batch=4)
+    prof = g.annotate(shapes)
+    # bandwidth-constrained LAN + heavy optimizer state: relocating a shard
+    # costs many step times, the regime overlapping exists for (on the toy
+    # geo topology migration is α-cheap and refill dominates — there the
+    # stop-the-world plan is already near-optimal)
+    cluster = network.homogeneous_lan(n=6, bandwidth_Bps=12.5e6, alpha=1e-4)
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[1]
+    res = {}
+    for mode in ("stop", "overlap"):
+        ctrl = ElasticController(g, prof, cluster,
+                                 single_failure_trace(victim, at=2.5 * t1),
+                                 n_micro=2, lease_s=t1, migration_mode=mode,
+                                 opt_state_mult=20.0)
+        res[mode] = ctrl.run(steps=30)
+    assert res["overlap"].useful_steps == res["stop"].useful_steps
+    phi_stop = res["stop"].post_failure_throughput(1)
+    phi_overlap = res["overlap"].post_failure_throughput(1)
+    assert phi_overlap > phi_stop
+    assert res["overlap"].total_seconds < res["stop"].total_seconds
+
+
+def test_overlap_straggler_rehabilitation_survives_stream():
+    """Recover announcements must not be lost while a background stream is
+    polling membership: the straggler/recover cycle ends with the belief
+    cleared in overlap mode exactly as in stop mode (regression — mid-stream
+    polls used to consume and drop 'recover' deltas)."""
+    g, prof, cluster, _, _ = _mlp_setup(n_layers=8)
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[0]
+    trace = ChurnTrace((
+        ChurnEvent(time=1.5 * t1, kind="slowdown", node=victim, factor=0.4),
+        ChurnEvent(time=25 * t1, kind="recover", node=victim),
+    ))
+    ctrl = ElasticController(g, prof, cluster, trace, n_micro=2,
+                             migration_mode="overlap")
+    res = ctrl.run(steps=60)
+    causes = [e.cause for e in res.epochs]
+    assert "straggler" in causes and "recovery" in causes
+    assert ctrl.believed_factors == {}
+
+
+def test_overlap_training_loss_identical_to_uninterrupted():
+    """Numerics are mode-independent: overlap-mode training through a
+    failure produces the same per-step losses and bit-exact final state as
+    an uninterrupted run (migration stays bit-exact through interim +
+    cutover)."""
+    g, prof, cluster, params, inputs = _overlap_setup(n_layers=8)
+    steps = 8
+
+    def data_fn(step):
+        return [inputs, inputs]
+
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[1]
+
+    base = ElasticController(g, prof, cluster, ChurnTrace(()),
+                             optimizer=adamw(lr=1e-3), n_micro=2)
+    res_base = base.run(steps=steps, data_fn=data_fn, params=params)
+    ctrl = ElasticController(g, prof, cluster,
+                             single_failure_trace(victim, at=2.5 * t1),
+                             optimizer=adamw(lr=1e-3), n_micro=2,
+                             lease_s=t1, migration_mode="overlap")
+    res = ctrl.run(steps=steps, data_fn=data_fn, params=params)
+    assert any(e.cause == "failure" for e in res.epochs)
+    lb, lc = dict(res_base.losses), dict(res.losses)
+    assert set(lb) == set(lc)
+    for s in lb:
+        assert lc[s] == pytest.approx(lb[s], rel=1e-6, abs=1e-7)
+    assert trees_bitexact(res.params, res_base.params)
 
 
 def test_predict_step_times_scale_with_slowdown():

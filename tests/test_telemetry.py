@@ -1,0 +1,186 @@
+"""Telemetry-driven straggler detection: sample emission from both
+executors, TelemetryLog aggregation (median-of-window + MAD outlier
+rejection), noiseless parity with the PR 1 estimator-fed detector path, and
+false-positive suppression on noisy traces."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import network
+from repro.core.estimator import (predict_step_time_components,
+                                  predict_step_times)
+from repro.core.executor import (DecentralizedRuntime, StepTiming,
+                                 TelemetrySink, simulate_iteration)
+from repro.core.scheduler import schedule_opfence
+from repro.elastic import StragglerDetector, TelemetryLog
+from helpers import mlp_chain
+
+
+def _setup(n_layers=10, n_dev=6, seed=3):
+    g, shapes, params, inputs = mlp_chain(n_layers=n_layers, d=16, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.geo_random(n=n_dev, n_sites=2, seed=seed)
+    sch = schedule_opfence(g, prof, cluster)
+    return g, prof, cluster, sch, params, inputs
+
+
+# ------------------------------------------------------------- emission ----
+def test_simulator_emits_per_stage_per_microbatch_samples():
+    g, prof, cluster, sch, _, _ = _setup()
+    sink = TelemetrySink()
+    n_micro = 3
+    simulate_iteration(g, prof, sch, cluster, n_micro=n_micro,
+                       telemetry=sink, step=7)
+    stages = sch.stage_devices()
+    # one sample per (stage, micro-batch, direction)
+    assert len(sink.samples) == 2 * n_micro * len(stages)
+    assert {s.node for s in sink.samples} == set(stages)
+    assert {s.micro_batch for s in sink.samples} == set(range(n_micro))
+    assert {s.backward for s in sink.samples} == {True, False}
+    assert all(s.step == 7 for s in sink.samples)
+    assert all(s.seconds >= 0.0 for s in sink.samples)
+
+
+def test_simulator_samples_match_estimator_attribution():
+    """Noiseless contract: per-node telemetry (Σ samples / n_micro) equals
+    predict_step_times — compute exactly, comm charged to the consumer's
+    stage in both directions."""
+    g, prof, cluster, sch, _, _ = _setup()
+    sink = TelemetrySink()
+    n_micro = 2
+    simulate_iteration(g, prof, sch, cluster, n_micro=n_micro, telemetry=sink)
+    obs_comp: dict = {}
+    obs_total: dict = {}
+    for s in sink.samples:
+        obs_comp[s.node] = obs_comp.get(s.node, 0.0) + s.compute_seconds
+        obs_total[s.node] = obs_total.get(s.node, 0.0) + s.seconds
+    comp_pred = predict_step_time_components(g, prof, cluster, sch.placement)
+    for node in obs_total:
+        comp, recv = comp_pred[node]
+        assert obs_comp[node] / n_micro == pytest.approx(comp, rel=1e-9)
+        assert obs_total[node] / n_micro == pytest.approx(comp + recv,
+                                                          rel=1e-6, abs=1e-12)
+
+
+def test_runtime_emits_wall_clock_samples():
+    g, prof, cluster, sch, params, inputs = _setup(n_layers=6, n_dev=4)
+    sink = TelemetrySink()
+    rt = DecentralizedRuntime(g, sch, telemetry=sink)
+    rt.train_step(params, [inputs, inputs])
+    stages = sch.stage_devices()
+    assert len(sink.samples) == 2 * 2 * len(stages)
+    assert all(s.compute_seconds > 0.0 for s in sink.samples)  # measured
+    assert {s.step for s in sink.samples} == {0}
+    rt.train_step(params, [inputs])
+    assert {s.step for s in sink.samples} == {0, 1}
+
+
+# ---------------------------------------------------------- aggregation ----
+def _sample(node, seconds, step, mb=0):
+    return StepTiming(node=node, stage=0, micro_batch=mb, backward=False,
+                      compute_seconds=seconds, step=step)
+
+
+def test_telemetry_log_normalizes_per_micro_batch():
+    log = TelemetryLog(window=4)
+    # 2 micro-batches, FP+BP each 1.0s -> 2.0s per micro-batch
+    for mb in range(2):
+        for backward in (False, True):
+            log.record(StepTiming(node=0, stage=0, micro_batch=mb,
+                                  backward=backward, compute_seconds=1.0,
+                                  step=0))
+    assert log.node_step_times() == {0: pytest.approx(2.0)}
+
+
+def test_telemetry_log_median_rejects_single_spike():
+    log = TelemetryLog(window=5, mad_k=3.5)
+    for t, s in enumerate([1.0, 1.01, 12.0, 0.99, 1.02]):   # one GC pause
+        log.record(_sample(0, s, step=t))
+    agg = log.node_step_times()[0]
+    assert agg == pytest.approx(1.01, abs=0.02)              # spike gone
+
+
+def test_telemetry_log_window_follows_sustained_shift():
+    log = TelemetryLog(window=3)
+    for t in range(4):
+        log.record(_sample(1, 1.0, step=t))
+    for t in range(4, 8):                       # genuine 4x slowdown
+        log.record(_sample(1, 4.0, step=t))
+    assert log.node_step_times()[1] == pytest.approx(4.0)
+
+
+def test_telemetry_log_clear_drops_history():
+    log = TelemetryLog(window=3)
+    log.record(_sample(0, 5.0, step=0))
+    log.clear()
+    assert log.node_step_times() == {} and log.n_samples == 0
+
+
+# --------------------------------------------------------------- parity ----
+def test_telemetry_fed_detector_matches_estimator_fed_on_noiseless_traces():
+    """The PR 1 path observed predict_step_times(true cluster); the telemetry
+    path observes aggregated simulator samples.  On noiseless traces both
+    detectors must flag the same straggler with matching severity."""
+    g, prof, cluster, sch, _, _ = _setup()
+    # the first stage has no inbound boundary edges, so its step time is
+    # pure compute — a compute slowdown is fully visible there (a comm-
+    # dominated stage hides it from *both* observation paths equally)
+    victim = sch.stage_devices()[0]
+    true_cl = network.with_slowdowns(cluster, {victim: 0.25})
+    predicted = predict_step_times(g, prof, cluster, sch.placement)
+
+    det_tele = StragglerDetector(predicted, min_observations=3)
+    det_est = StragglerDetector(predicted, min_observations=3)
+    log = TelemetryLog(window=5)
+    estimator_obs = predict_step_times(g, prof, true_cl, sch.placement)
+    for step in range(6):
+        sink = TelemetrySink()
+        simulate_iteration(g, prof, sch, true_cl, n_micro=2, telemetry=sink,
+                           step=step)
+        log.record_step(sink.samples, step=step)
+        det_tele.observe(log.node_step_times())
+        det_est.observe(estimator_obs)
+
+    assert det_tele.flagged() == det_est.flagged() == [victim]
+    for node in predicted:
+        assert det_tele.severity(node) == pytest.approx(
+            det_est.severity(node), rel=1e-6)
+
+
+def test_aggregation_window_suppresses_false_positives_on_noisy_traces():
+    """A healthy node with occasional timing spikes (GC pause, transient
+    congestion) must NOT be flagged through the aggregation window, while
+    feeding the same raw per-step times straight to the detector (window=1,
+    the no-telemetry strawman) false-flags it."""
+    rng = np.random.default_rng(0)
+    predicted = {0: 1.0, 1: 1.0}
+    det_windowed = StragglerDetector(predicted, min_observations=3)
+    det_raw = StragglerDetector(predicted, min_observations=3)
+    log = TelemetryLog(window=5, mad_k=3.5)
+    raw_flagged = False
+    for step in range(40):
+        base = 1.0 + float(rng.uniform(-0.05, 0.05))
+        spike = 8.0 if step % 10 == 3 else 0.0      # 1-in-10 step stall
+        log.record(_sample(0, base + spike, step=step))
+        log.record(_sample(1, base, step=step))
+        det_windowed.observe(log.node_step_times())
+        det_raw.observe({0: base + spike, 1: base})
+        raw_flagged |= bool(det_raw.flagged())
+    assert raw_flagged                     # the strawman cries wolf ...
+    assert det_windowed.flagged() == []    # ... the window does not
+
+
+def test_noisy_window_still_detects_real_straggler():
+    """Robust aggregation must not hide a genuine slowdown: multiplicative
+    jitter on every sample, node 1 runs 4x slow — only node 1 flags."""
+    rng = np.random.default_rng(1)
+    predicted = {0: 1.0, 1: 1.0}
+    det = StragglerDetector(predicted, min_observations=3)
+    log = TelemetryLog(window=5)
+    for step in range(30):
+        j0, j1 = (float(rng.uniform(0.9, 1.1)) for _ in range(2))
+        log.record(_sample(0, 1.0 * j0, step=step))
+        log.record(_sample(1, 4.0 * j1, step=step))
+        det.observe(log.node_step_times())
+    assert det.flagged() == [1]
