@@ -1,0 +1,71 @@
+"""Joint OP-Fence/AdaTopK co-planning: throughput + predicted pace per
+scheduler — the perf artifact the CI trajectory tracks.
+
+Each scheduler in the registry (equal_number, equal_compute, opfence, joint)
+is paired with its AdaTopK plan (joint uses the plan its fixed point
+converged on) and measured two ways on the same workload/topology:
+
+* ``pace``    — the unified EdgeCostModel's Eq. 3 steady-state pace, the
+                planner's own objective;
+* ``phi``     — samples/second from the discrete-event simulator, the
+                ground-truth the pace is supposed to track.
+
+``profile="tiny"`` shrinks the workload so CI can smoke the whole joint
+path in seconds; ``--json`` on the harness dumps the returned dict into
+``BENCH_joint_planning.json``.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import resolve
+from repro.core import (EdgeCostModel, SCHEDULERS, network, plan_adatopk,
+                        schedule_joint, simulate_iteration)
+from repro.models.opgraph_models import profile_opgraph
+
+RATIO = 100.0
+
+
+def _workload(profile: str):
+    if profile == "gpt2-xl":
+        cfg = resolve("gpt2-xl").full
+        batch, seq = 3, 1024               # paper Table 6
+        cluster = network.paper_testbed(1, seed=0)
+    elif profile == "tiny":
+        from repro.configs.base import ModelCfg
+        cfg = ModelCfg(name="gpt-joint-tiny", family="dense", n_layers=4,
+                       d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                       vocab=128, rope_fraction=0.0, max_seq=64,
+                       norm="layernorm", act="gelu")
+        batch, seq = 2, 64
+        cluster = network.geo_random(n=8, n_sites=2, seed=0)
+    else:
+        raise ValueError(f"unknown joint profile {profile!r}")
+    graph = profile_opgraph(cfg, batch, seq)
+    prof = graph.annotate({"tokens": (batch, seq), "labels": (batch, seq)})
+    return graph, prof, cluster, batch
+
+
+def run(csv_writer, profile: str = "gpt2-xl", n_micro: int = 2
+        ) -> Dict[str, Dict[str, float]]:
+    graph, prof, cluster, batch = _workload(profile)
+    dense = EdgeCostModel(graph, prof, cluster)
+    out: Dict[str, Dict[str, float]] = {}
+    for name, sfn in SCHEDULERS.items():
+        if name == "joint":
+            jp = schedule_joint(graph, prof, cluster, ratio=RATIO)
+            sch, plan = jp.schedule, jp.plan
+            pace = jp.predicted_pace
+        else:
+            sch = sfn(graph, prof, cluster)
+            plan = plan_adatopk(graph, prof, cluster, sch.placement, RATIO)
+            pace = dense.with_plan(plan).stage_pace(sch)
+        t = simulate_iteration(graph, prof, sch, cluster, plan,
+                               n_micro=n_micro).iteration_time
+        phi = batch / t
+        out[name] = dict(pace=pace, iter_s=t, phi=phi)
+        csv_writer(f"joint_{profile}_{name}", t * 1e6,
+                   f"phi={phi:.3f}smp/s_pace={pace:.4f}")
+    # the co-planner's pace may never exceed the blind pipeline's
+    assert out["joint"]["pace"] <= out["opfence"]["pace"] * (1 + 1e-12), out
+    return out

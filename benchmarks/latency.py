@@ -29,7 +29,10 @@ def run_one_testbed(testbed: int) -> Dict[str, Dict[str, float]]:
 
     out: Dict[str, Dict[str, float]] = {}
     for sname, sfn in SCHEDULERS.items():
-        sch = sfn(graph, prof, cluster)
+        if sname == "joint":
+            continue   # Fig. 10 is the paper's 3 schedulers; the joint
+        sch = sfn(graph, prof, cluster)   # co-planner has its own bench
+                                          # (joint_planning / ratio_sweep)
         plans = {
             "dense": plan_none(graph, sch.placement),
             "uniform_topk": plan_uniform(graph, sch.placement, RATIO),

@@ -1,12 +1,17 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--steps N]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--steps N] [--json]
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines.  ``--json`` additionally
+writes one ``BENCH_<name>.json`` perf artifact per bench from whatever the
+bench's ``run()`` returned (throughput + predicted pace per scheduler for
+``joint_planning``) — CI uploads these so the perf trajectory is tracked
+per commit instead of scrolling away in logs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -14,6 +19,14 @@ import traceback
 
 def csv_writer(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def write_json_artifact(name: str, result, wall_s: float) -> None:
+    path = f"BENCH_{name}.json"
+    payload = {"bench": name, "wall_seconds": wall_s, "result": result}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+    print(f"# wrote {path}", flush=True)
 
 
 def main() -> None:
@@ -24,15 +37,22 @@ def main() -> None:
     ap.add_argument("--churn-profile", default="gpt2-xl",
                     choices=["gpt2-xl", "tiny"],
                     help="churn bench workload (tiny = CI smoke)")
+    ap.add_argument("--joint-profile", default="gpt2-xl",
+                    choices=["gpt2-xl", "tiny"],
+                    help="joint planning bench workload (tiny = CI smoke)")
+    ap.add_argument("--json", action="store_true",
+                    help="write a BENCH_<name>.json artifact per bench")
     args = ap.parse_args()
 
     from . import (ablation_microbatch, churn, convergence, gpu_table,
-                   kernel_bench, latency, ratio_sweep, roofline_table,
-                   speedup_table)
+                   joint_planning, kernel_bench, latency, ratio_sweep,
+                   roofline_table, speedup_table)
 
     benches = {
         "churn_elastic": lambda: churn.run(csv_writer,
                                            profile=args.churn_profile),
+        "joint_planning": lambda: joint_planning.run(
+            csv_writer, profile=args.joint_profile),
         "table1_gpu": lambda: gpu_table.run(csv_writer),
         "fig8_convergence": lambda: convergence.run(csv_writer,
                                                     steps=args.steps),
@@ -49,8 +69,11 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
-            fn()
-            csv_writer(f"{name}__wall", (time.time() - t0) * 1e6, "ok")
+            result = fn()
+            wall = time.time() - t0
+            csv_writer(f"{name}__wall", wall * 1e6, "ok")
+            if args.json:
+                write_json_artifact(name, result, wall)
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()

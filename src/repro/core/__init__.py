@@ -1,17 +1,19 @@
-"""FusionLLM core: OP-DAG IR, RAD, estimator, OP-Fence scheduler, AdaTopK."""
+"""FusionLLM core: OP-DAG IR, RAD, estimator, unified edge-cost model,
+OP-Fence scheduler + joint co-planner, AdaTopK."""
 from .opgraph import (OpData, OpGraph, OpNode, OpProfile, OpType, SubDag,
                       build_subdags)
 from .estimator import (ClusterSpec, DeviceSpec, LinkSpec, make_device,
                         fit_alpha_beta, fit_lambda, estimate_op_costs,
                         predict_step_times)
+from .costmodel import EdgeCost, EdgeCostModel, fit_link_corrections
 from .throughput import (IterationEstimate, NodeLoad, estimate_iteration,
                          latency_pipelined, latency_single_pass, node_loads,
                          throughput)
-from .partition import (partition_equal_compute, partition_equal_number,
-                        partition_min_bottleneck)
-from .scheduler import (Schedule, SCHEDULERS, louvain_communities,
+from .partition import (min_bottleneck_chain, partition_equal_compute,
+                        partition_equal_number, partition_min_bottleneck)
+from .scheduler import (JointPlan, Schedule, SCHEDULERS, louvain_communities,
                         schedule_equal_compute, schedule_equal_number,
-                        schedule_opfence)
+                        schedule_joint, schedule_opfence)
 from .compression import (CompressionPlan, adaptive_ratios, boundary_compress,
                           compress_for_edge, ef_compress, plan_adatopk,
                           plan_none, plan_uniform, ratio_to_k, topk_decode,

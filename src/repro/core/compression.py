@@ -14,14 +14,18 @@ hard::
 
 **Break-even clamp** (bugfix over the paper's formula): the encoding has a
 fixed per-kept-element overhead, so a ratio in ``(1, break_even]`` *inflates*
-wire traffic instead of shrinking it — for the paper encoding ``k·12`` bytes
-beat the dense ``d·4`` only when ``r = d/k > 3``; for the mask encoding
-``d/8 + 4k ≤ 4d`` requires ``r > 32/31``.  :func:`adaptive_ratios` clamps any
-ratio at or below the encoding's break-even to 1.0 (send dense), and
-:func:`plan_adatopk` additionally verifies each planned edge with the exact
-integer :func:`wire_bytes` (ceil(d/r) can tip a ratio just above break-even
-back over the dense size), so no planned edge ever carries more bytes than
-the uncompressed tensor.
+wire traffic instead of shrinking it — for the paper encoding
+``k·(itemsize+8)`` bytes beat the dense ``d·itemsize`` only when
+``r = d/k > (itemsize+8)/itemsize`` (3.0 at fp32, 5.0 at bf16 — the int64
+index overhead amortizes over fewer payload bytes); for the mask encoding
+``d/8 + k·itemsize ≤ d·itemsize`` requires ``r > itemsize/(itemsize−1/8)``.
+:func:`adaptive_ratios` clamps any ratio at or below the encoding's
+break-even to 1.0 (send dense), and :func:`plan_adatopk` additionally
+verifies each planned edge with the exact integer :func:`wire_bytes` at the
+producer's profile-derived itemsize (ceil(d/r) can tip a ratio just above
+break-even back over the dense size, and a bf16 edge inflates where an fp32
+edge would not), so no planned edge ever carries more bytes than the
+uncompressed tensor.
 
 Beyond-paper extras (both off by default, flagged where used):
 * mask+values encoding — 1 bit/elem bitmap instead of int64 indexes
@@ -98,17 +102,21 @@ def wire_bytes(numel: int, ratio: float, encoding: str = "paper",
                itemsize: int = 4) -> float:
     """Bytes on the wire for one tensor under a ratio.
 
-    encoding='paper' : k·(4 values + 8 index) bytes  (float32 + int64, Eq. 7)
-    encoding='mask'  : k·4 + numel/8 bytes           (beyond-paper bitmap)
+    ``itemsize`` is the boundary tensor's dtype width — the wire carries
+    values at that width (:func:`topk_decode` preserves the wire dtype), so a
+    bf16 edge pays 2 bytes per kept value, not a hard-coded 4.
+
+    encoding='paper' : k·(itemsize values + 8 index) bytes  (Eq. 7 @ fp32)
+    encoding='mask'  : k·itemsize + numel/8 bytes           (bitmap)
     encoding='none'  : numel·itemsize
     """
     if ratio <= 1.0 or encoding == "none":
         return float(numel * itemsize)
     k = ratio_to_k(numel, ratio)
     if encoding == "paper":
-        return float(k * (4 + 8))
+        return float(k * (itemsize + 8))
     if encoding == "mask":
-        return float(k * 4 + numel / 8.0)
+        return float(k * itemsize + numel / 8.0)
     raise ValueError(f"unknown encoding {encoding!r}")
 
 
@@ -116,40 +124,52 @@ def wire_bytes(numel: int, ratio: float, encoding: str = "paper",
 def encoding_break_even(encoding: str, itemsize: int = 4) -> float:
     """Smallest ratio at which the encoding stops inflating wire traffic.
 
-    paper : k·12 bytes vs dense d·itemsize  →  r > 12/itemsize   (3.0 @ fp32)
-    mask  : k·4 + d/8 vs dense d·itemsize   →  r > 4/(itemsize − 1/8)
+    paper : k·(itemsize+8) vs dense d·itemsize → r > (itemsize+8)/itemsize
+            (3.0 @ fp32, 5.0 @ bf16 — narrower dtypes pay the int64 index
+            overhead over fewer payload bytes, so they break even later)
+    mask  : k·itemsize + d/8 vs dense d·itemsize
+            → r > itemsize/(itemsize − 1/8)
     none  : never compresses → +inf.
     """
     if encoding == "paper":
-        return 12.0 / itemsize
+        return (itemsize + 8.0) / itemsize
     if encoding == "mask":
-        return 4.0 / (itemsize - 0.125)
+        return itemsize / (itemsize - 0.125)
     if encoding == "none":
         return float("inf")
     raise ValueError(f"unknown encoding {encoding!r}")
 
 
 def adaptive_ratios(recv_times: Sequence[float], r: float,
-                    index_overhead: float = 3.0,
-                    break_even: Optional[float] = None) -> list:
+                    index_overhead=3.0,
+                    break_even=None) -> list:
     """Eq. 7 with a break-even clamp: per-CompNode ratio from estimated
     original communication times.
 
-    r_i = 3 r · R_i / max_p R_p.  CompNodes on fast links get r_i → 1 (no
-    compression); the slowest link gets the full 3r.  Any r_i at or below
-    ``break_even`` (default: ``index_overhead``, the paper encoding's
-    per-element overhead factor) is clamped to 1.0 — the paper's
-    ``max(1, ·)`` floor still pays ``index_overhead×`` per kept element, so
-    ratios in ``(1, break_even]`` would *inflate* the wire payload.
+    r_i = overhead · r · R_i / max_p R_p.  CompNodes on fast links get
+    r_i → 1 (no compression); the slowest link gets the full overhead·r.
+    The paper's coefficient 3 is the fp32 paper-encoding overhead
+    ``(itemsize+8)/itemsize``; both ``index_overhead`` and ``break_even``
+    also accept a per-edge sequence so narrow dtypes (bf16: overhead 5) hit
+    the requested wire-byte target instead of under-compressing at the fp32
+    coefficient.  Any r_i at or below its ``break_even`` (default:
+    ``index_overhead``, the encoding's per-element overhead factor) is
+    clamped to 1.0 — the paper's ``max(1, ·)`` floor still pays the
+    overhead per kept element, so ratios in ``(1, break_even]`` would
+    *inflate* the wire payload.
     """
     if break_even is None:
         break_even = index_overhead
     R = np.asarray(list(recv_times), dtype=np.float64)
+    oh = np.broadcast_to(np.asarray(index_overhead, dtype=np.float64),
+                         R.shape)
+    be = np.broadcast_to(np.asarray(break_even, dtype=np.float64), R.shape)
     mx = float(R.max()) if R.size else 0.0
     if mx <= 0.0:
         return [1.0 for _ in recv_times]
-    raw = [index_overhead * r * Ri / mx for Ri in R]
-    return [float(ri) if ri > break_even else 1.0 for ri in raw]
+    raw = oh * r * R / mx
+    return [float(ri) if ri > be_i else 1.0
+            for ri, be_i in zip(raw, be)]
 
 
 @dataclasses.dataclass
@@ -193,34 +213,54 @@ def plan_uniform(graph, placement: Mapping[str, int], ratio: float,
 
 def plan_adatopk(graph, profiles, cluster, placement: Mapping[str, int],
                  ratio: float, encoding: str = "paper",
-                 index_overhead: float = 3.0,
-                 error_feedback: bool = False) -> CompressionPlan:
-    """AdaTopK: Eq. 7 driven by the estimated per-edge receive times.
+                 index_overhead: Optional[float] = None,
+                 error_feedback: bool = False,
+                 cost_model=None) -> CompressionPlan:
+    """AdaTopK: Eq. 7 driven by the per-edge *dense* receive times — a thin
+    policy over :class:`repro.core.costmodel.EdgeCostModel`.
 
-    Ratios at or below the encoding's break-even are clamped to 1.0 (see
-    module docstring), and every surviving edge is verified against the exact
-    integer :func:`wire_bytes` — ``ceil(d/r)`` rounding can push a ratio just
-    above break-even back over the dense payload, so the guarantee here is
-    hard: no planned edge carries more wire bytes than its dense tensor.
+    ``index_overhead=None`` (default) uses each edge's own encoding overhead
+    factor ``(itemsize+8)/itemsize`` as Eq. 7's coefficient — exactly the
+    paper's 3 for fp32 paper encoding, 5 for bf16 — so narrow dtypes hit the
+    requested wire-byte target instead of under-compressing at the fp32
+    coefficient.  Pass a number to force one uniform coefficient (the
+    pre-dtype-aware knob).
+
+    Ratios at or below their edge's dtype-exact break-even are clamped to
+    1.0 (see module docstring), and every surviving edge is verified against
+    the exact integer :func:`wire_bytes` at the producer's dtype —
+    ``ceil(d/r)`` rounding can push a ratio just above break-even back over
+    the dense payload.  The guarantee is hard: no planned edge carries more
+    wire bytes than its dense tensor.
+
+    ``cost_model`` supplies the byte/seconds arithmetic (its own compression
+    plan is ignored — AdaTopK rates links by their *uncompressed* transport
+    time); by default a dense model over ``(graph, profiles, cluster)`` is
+    built.
     """
-    edges = list(_cross_edges(graph, placement))
+    from .costmodel import EdgeCostModel   # late import: costmodel composes
+    model = (cost_model or                 # this module's wire encodings
+             EdgeCostModel(graph, profiles, cluster)).with_plan(None)
+    edges = list(model.cross_edges(placement))
     if not edges:
         return CompressionPlan(edge_ratio={}, base_ratio=ratio,
                                encoding=encoding,
                                error_feedback=error_feedback)
-    times = []
-    for (a, n) in edges:
-        nbytes = profiles[a].out_bytes
-        times.append(cluster.comm_time(placement[a], placement[n], nbytes))
-    ratios = adaptive_ratios(times, ratio, index_overhead=index_overhead,
-                             break_even=encoding_break_even(encoding))
+    times = [model.link_seconds(placement[a], placement[n],
+                                model.dense_bytes(a)) for (a, n) in edges]
+    be_edge = [encoding_break_even(encoding, model.itemsize(a))
+               for (a, n) in edges]
+    overheads = be_edge if index_overhead is None \
+        else [float(index_overhead)] * len(edges)
+    ratios = adaptive_ratios(times, ratio, index_overhead=overheads,
+                             break_even=be_edge)
     edge_ratio: Dict[Tuple[str, str], float] = {}
     for (a, n), r_i in zip(edges, ratios):
         if r_i <= 1.0:
             continue
-        numel = int(np.prod(profiles[a].out_shape))
-        if wire_bytes(numel, r_i, encoding) >= numel * 4:
-            continue                      # integer rounding re-inflated it
+        if wire_bytes(model.numel(a), r_i, encoding,
+                      itemsize=model.itemsize(a)) >= model.dense_bytes(a):
+            continue         # integer rounding re-inflated this edge
         edge_ratio[(a, n)] = r_i
     return CompressionPlan(edge_ratio=edge_ratio, base_ratio=ratio,
                            encoding=encoding, error_feedback=error_feedback)

@@ -1,0 +1,206 @@
+"""Unified edge-cost model — the single source of truth for transported bytes.
+
+Before this layer existed the codebase carried **three inconsistent byte
+models** that could not compose:
+
+* ``partition.py`` scaled stage-boundary bytes with an ad-hoc stage-indexed
+  ``edge_bytes_scale`` mapping,
+* ``estimator.py`` approximated compression with a smooth per-edge
+  ``compress_ratio`` (``bytes · 3/r``, no integer rounding, fp32 hard-coded),
+* ``compression.py`` / ``executor.py`` used the exact integer
+  :func:`repro.core.compression.wire_bytes` encoding.
+
+The planner therefore scheduled on one arithmetic and simulated on another —
+and AdaTopK, which *changes* which cut is bottleneck-optimal, could not feed
+back into the DP at all.  :class:`EdgeCostModel` composes, per op-pair edge:
+
+* the α–β link model of :class:`repro.core.estimator.ClusterSpec`,
+* the exact integer wire encoding (dtype-aware itemsize derived from the
+  producer's profile, index overhead, break-even clamp) under an optional
+  :class:`repro.core.compression.CompressionPlan`,
+* optional telemetry-calibrated per-link corrections (a measured/modeled
+  seconds ratio fitted by :func:`fit_link_corrections`).
+
+Every byte-accounting consumer — the min-bottleneck DP, OP-Fence, the Eq. 1
+estimator, the discrete-event simulator, AdaTopK planning, and the elastic
+re-planner — now reads this one model, so "schedule under compressed costs"
+is just ``model.with_plan(plan)``.  The stage-boundary view the DP needs is
+*derived* from op-pair costs (the boundary edge between consecutive chain
+segments is itself an op pair), never duplicated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .compression import CompressionPlan, wire_bytes
+from .estimator import ClusterSpec
+from .opgraph import OpGraph, OpProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeCost:
+    """Fully resolved cost of one cross-CompNode edge."""
+
+    producer: str
+    consumer: str
+    src: int
+    dst: int
+    dense_bytes: float         # uncompressed payload at the producer's dtype
+    wire_bytes: float          # exact on-the-wire bytes under the plan
+    seconds: float             # α + β·wire_bytes, link-corrected
+
+
+class EdgeCostModel:
+    """Per-edge transported bytes and seconds, keyed by (producer, consumer).
+
+    Immutable by convention: derive variants with :meth:`with_plan` /
+    :meth:`with_cluster` / :meth:`with_link_corrections` instead of mutating.
+    ``plan=None`` means dense transport; ``link_corrections`` maps a directed
+    CompNode pair ``(i, j)`` to a multiplicative correction on the modeled
+    link seconds (1.0 = trust the α–β fit).
+    """
+
+    def __init__(self, graph: OpGraph, profiles: Mapping[str, OpProfile],
+                 cluster: ClusterSpec,
+                 plan: Optional[CompressionPlan] = None,
+                 link_corrections: Optional[Mapping[Tuple[int, int], float]] = None):
+        self.graph = graph
+        self.profiles = profiles
+        self.cluster = cluster
+        self.plan = plan
+        self.link_corrections = dict(link_corrections or {})
+
+    # ------------------------------------------------------------ variants --
+    def with_plan(self, plan: Optional[CompressionPlan]) -> "EdgeCostModel":
+        return EdgeCostModel(self.graph, self.profiles, self.cluster, plan,
+                             self.link_corrections)
+
+    def with_cluster(self, cluster: ClusterSpec) -> "EdgeCostModel":
+        return EdgeCostModel(self.graph, self.profiles, cluster, self.plan,
+                             self.link_corrections)
+
+    def with_link_corrections(self, corrections: Mapping[Tuple[int, int], float]
+                              ) -> "EdgeCostModel":
+        return EdgeCostModel(self.graph, self.profiles, self.cluster,
+                             self.plan, corrections)
+
+    # -------------------------------------------------------------- per-op --
+    def numel(self, op: str) -> int:
+        return int(np.prod(self.profiles[op].out_shape)) \
+            if self.profiles[op].out_shape else 1
+
+    def itemsize(self, op: str) -> int:
+        """Activation itemsize derived from the producer's profile (the
+        profile's ``out_bytes`` already encodes the dtype the broker annotated
+        the graph with — bf16 boundaries are 2 bytes/elem, not a hard-coded
+        4)."""
+        n = self.numel(op)
+        if n <= 0:
+            return 4
+        return max(1, int(round(self.profiles[op].out_bytes / n)))
+
+    def dense_bytes(self, op: str) -> float:
+        """Uncompressed payload of one boundary tensor."""
+        return float(self.profiles[op].out_bytes)
+
+    # ------------------------------------------------------------ per-edge --
+    def ratio(self, producer: str, consumer: str) -> float:
+        if self.plan is None:
+            return 1.0
+        return self.plan.ratio(producer, consumer)
+
+    @property
+    def encoding(self) -> str:
+        return self.plan.encoding if self.plan is not None else "none"
+
+    def edge_wire_bytes(self, producer: str, consumer: str) -> float:
+        """Exact integer-encoding bytes on the wire for one edge, under the
+        plan's ratio (dense when unplanned) at the producer's dtype."""
+        r = self.ratio(producer, consumer)
+        if r <= 1.0 or self.encoding == "none":
+            return self.dense_bytes(producer)   # exact, even for 0-byte ops
+        return wire_bytes(self.numel(producer), r, self.encoding,
+                          itemsize=self.itemsize(producer))
+
+    def link_seconds(self, src: int, dst: int, nbytes: float) -> float:
+        """α–β seconds for ``nbytes`` on the (src, dst) link, scaled by the
+        telemetry-calibrated correction when one was fitted."""
+        t = self.cluster.comm_time(src, dst, nbytes)
+        return t * self.link_corrections.get((src, dst), 1.0)
+
+    def edge_seconds(self, producer: str, consumer: str,
+                     src: int, dst: int) -> float:
+        """Transport seconds of one edge's payload over the (src, dst) link."""
+        if src == dst:
+            return 0.0
+        return self.link_seconds(src, dst,
+                                 self.edge_wire_bytes(producer, consumer))
+
+    def edge_cost(self, producer: str, consumer: str,
+                  src: int, dst: int) -> EdgeCost:
+        wb = self.edge_wire_bytes(producer, consumer)
+        return EdgeCost(producer=producer, consumer=consumer, src=src, dst=dst,
+                        dense_bytes=self.dense_bytes(producer), wire_bytes=wb,
+                        seconds=0.0 if src == dst
+                        else self.link_seconds(src, dst, wb))
+
+    # --------------------------------------------------------------- views --
+    def cross_edges(self, placement: Mapping[str, int]
+                    ) -> Iterator[Tuple[str, str]]:
+        """(producer, consumer) pairs crossing CompNodes under a placement."""
+        for n, node in self.graph.nodes.items():
+            for a in node.args:
+                if placement[a] != placement[n]:
+                    yield (a, n)
+
+    def stage_pace(self, schedule) -> float:
+        """Eq. 3 steady-state pace ``max_k max(C_k, R_k)`` of a schedule under
+        this model — the *derived* stage-boundary view.
+
+        ``C_k`` uses forward FLOPs (the same objective the min-bottleneck DP
+        optimizes) and ``R_k`` charges every cross-stage edge to the CompNode
+        owning the consumer op, the shared attribution of estimator,
+        simulator, and telemetry.
+        """
+        placement = schedule.placement
+        comp: Dict[int, float] = {}
+        recv: Dict[int, float] = {}
+        for d in schedule.stage_devices():
+            comp[d] = sum(self.profiles[n].fwd_flops
+                          for n in schedule.assignment[d]) \
+                / self.cluster.devices[d].speed
+            recv[d] = 0.0
+        for (a, n) in self.cross_edges(placement):
+            recv[placement[n]] = recv.get(placement[n], 0.0) + \
+                self.edge_seconds(a, n, placement[a], placement[n])
+        return max((max(comp[d], recv[d]) for d in comp), default=0.0)
+
+
+def fit_link_corrections(measured: Mapping[Tuple[int, int],
+                                           Sequence[Tuple[float, float]]],
+                         cluster: ClusterSpec,
+                         clamp: Tuple[float, float] = (0.25, 4.0)
+                         ) -> Dict[Tuple[int, int], float]:
+    """Telemetry-calibrated link corrections.
+
+    ``measured[(i, j)]`` is a sequence of ``(nbytes, observed_seconds)``
+    transfer samples on the directed (i, j) link.  The correction is the
+    least-squares scale of observed vs α–β-modeled seconds (slope through the
+    origin), clamped to ``clamp`` so one pathological sample cannot swing the
+    planner by orders of magnitude.  Feed the result to
+    :meth:`EdgeCostModel.with_link_corrections`.
+    """
+    lo, hi = clamp
+    out: Dict[Tuple[int, int], float] = {}
+    for (i, j), samples in measured.items():
+        pred = np.array([cluster.comm_time(i, j, nb) for nb, _ in samples],
+                        dtype=np.float64)
+        obs = np.array([s for _, s in samples], dtype=np.float64)
+        denom = float(np.dot(pred, pred))
+        if denom <= 0.0:
+            continue
+        out[(i, j)] = float(np.clip(np.dot(pred, obs) / denom, lo, hi))
+    return out

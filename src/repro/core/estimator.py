@@ -169,17 +169,22 @@ def estimate_op_costs(graph: OpGraph,
                       profiles: Mapping[str, OpProfile],
                       cluster: ClusterSpec,
                       placement: Mapping[str, int],
-                      compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
-                      index_overhead: float = 3.0,
+                      cost_model=None,
                       backward: bool = False) -> Dict[str, OpCost]:
     """Per-op Eq.(1) costs under a placement {op -> CompNode index}.
 
-    ``compress_ratio`` maps a cross-node edge (producer, consumer) to the
-    Top-K ratio r on that edge; the transported payload shrinks to
-    ``index_overhead / r`` of the original (values + indexes, paper Eq. 7's
-    coefficient 3 for float32 values + int64 indexes).
+    All transported-byte accounting flows through the unified
+    :class:`repro.core.costmodel.EdgeCostModel`: a cross-node edge's payload
+    is the model's exact integer wire encoding under its compression plan
+    (dense when the model carries no plan).  ``cost_model`` defaults to a
+    dense model over ``(graph, profiles, cluster)``; pass
+    ``EdgeCostModel(..., plan=plan)`` to estimate under compression — this
+    replaces the removed ad-hoc ``compress_ratio`` mapping, whose smooth
+    ``3/r`` approximation disagreed with the executor's exact wire bytes.
     """
-    compress_ratio = compress_ratio or {}
+    if cost_model is None:
+        from .costmodel import EdgeCostModel   # late: costmodel imports us
+        cost_model = EdgeCostModel(graph, profiles, cluster)
     costs: Dict[str, OpCost] = {}
     for n, node in graph.nodes.items():
         p = placement[n]
@@ -192,21 +197,13 @@ def estimate_op_costs(graph: OpGraph,
             q = placement[a]
             if q == p:
                 continue
-            nbytes = profiles[a].out_bytes
-            r = compress_ratio.get((a, n), 1.0)
-            if r > 1.0:
-                nbytes = nbytes * index_overhead / r
-            recv += cluster.comm_time(q, p, nbytes)
+            nbytes = cost_model.edge_wire_bytes(a, n)
+            recv += cost_model.link_seconds(q, p, nbytes)
             recv_bytes += int(nbytes)
         send_bytes = 0
-        users = graph.users[n]
-        for u in users:
+        for u in graph.users[n]:
             if placement[u] != p:
-                nbytes = prof.out_bytes
-                r = compress_ratio.get((n, u), 1.0)
-                if r > 1.0:
-                    nbytes = nbytes * index_overhead / r
-                send_bytes += int(nbytes)
+                send_bytes += int(cost_model.edge_wire_bytes(n, u))
         costs[n] = OpCost(name=n, comp_time=comp, recv_time=recv,
                           recv_bytes=recv_bytes, send_bytes=send_bytes)
     return costs
@@ -216,18 +213,20 @@ def predict_step_time_components(graph: OpGraph,
                                  profiles: Mapping[str, OpProfile],
                                  cluster: ClusterSpec,
                                  placement: Mapping[str, int],
-                                 compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
+                                 cost_model=None,
                                  ) -> Dict[int, Tuple[float, float]]:
     """Per-CompNode (compute, recv) predicted FP+BP seconds, one micro-batch.
 
     Both directions of every cross-node edge are charged to the CompNode
     owning the *consumer* op — the attribution the executor's telemetry
     samples reproduce, so predictions and observations decompose identically.
+    ``cost_model`` (see :func:`estimate_op_costs`) carries the compression
+    plan and any telemetry-calibrated link corrections.
     """
     fwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, backward=False)
+                            cost_model, backward=False)
     bwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, backward=True)
+                            cost_model, backward=True)
     out: Dict[int, Tuple[float, float]] = {}
     for n in graph.nodes:
         p = placement[n]
@@ -241,7 +240,7 @@ def predict_step_times(graph: OpGraph,
                        profiles: Mapping[str, OpProfile],
                        cluster: ClusterSpec,
                        placement: Mapping[str, int],
-                       compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
+                       cost_model=None,
                        ) -> Dict[int, float]:
     """Per-CompNode predicted FP+BP seconds for one micro-batch.
 
@@ -254,6 +253,6 @@ def predict_step_times(graph: OpGraph,
     """
     out: Dict[int, float] = {}
     for p, (comp, recv) in predict_step_time_components(
-            graph, profiles, cluster, placement, compress_ratio).items():
+            graph, profiles, cluster, placement, cost_model).items():
         out[p] = comp + recv
     return out

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .compression import CompressionPlan, plan_none, wire_bytes, ratio_to_k
+from .compression import CompressionPlan, plan_none, ratio_to_k
+from .costmodel import EdgeCostModel
 from .estimator import ClusterSpec, LinkSpec
 from .opgraph import OpData, OpGraph, OpProfile, OpType
 from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
@@ -204,8 +205,12 @@ class SimResult:
 
 def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
                   schedule: Schedule, cluster: ClusterSpec,
-                  plan: CompressionPlan, backward: bool):
-    """Per-stage compute seconds + boundary (bytes, link) into each stage."""
+                  model: EdgeCostModel, backward: bool):
+    """Per-stage compute seconds + boundary (bytes, link) into each stage.
+
+    All transported bytes/seconds come from the unified ``model`` (the plan's
+    exact wire encoding at the producer's dtype plus α–β link seconds), so
+    simulated comm charges agree with the estimator's prediction exactly."""
     placement = schedule.placement
     stages = [d for d in schedule.stages if schedule.assignment[d]]
     comp = []
@@ -228,13 +233,11 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
                 continue
             if graph.nodes[a].op_type in (OpType.PLACEHOLDER, OpType.VARIABLE):
                 continue
-            r = plan.ratio(a, n)
-            nbytes = wire_bytes(int(np.prod(profiles[a].out_shape)), r,
-                                plan.encoding)
+            nbytes = model.edge_wire_bytes(a, n)
             src, dst = placement[a], placement[n]
             if backward:
                 src, dst = dst, src
-            t = cluster.comm_time(src, dst, nbytes)
+            t = model.link_seconds(src, dst, nbytes)
             edges.append((stage_of[src], stage_of[dst], t,
                           stage_of[placement[n]]))
             total_bytes += nbytes
@@ -246,7 +249,8 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                        plan: Optional[CompressionPlan] = None,
                        n_micro: int = 1,
                        telemetry: Optional[Any] = None,
-                       step: int = 0) -> SimResult:
+                       step: int = 0,
+                       cost_model: Optional[EdgeCostModel] = None) -> SimResult:
     """Discrete-event GPipe replay: FP fills stage by stage per micro-batch,
     then BP drains in reverse.  Each device is a serial resource; each
     directed stage pair is a serial link; compute of micro-batch m+1 overlaps
@@ -255,12 +259,23 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
     ``telemetry`` (anything with ``record(StepTiming)``) receives one sample
     per (stage, micro-batch, direction), stamped with ``step`` — the
     simulated stand-in for real per-CompNode executor timings that the
-    elastic broker's TelemetryLog aggregates for straggler detection."""
-    plan = plan or plan_none(graph, schedule.placement)
+    elastic broker's TelemetryLog aggregates for straggler detection.
+
+    ``cost_model`` supplies the wire encoding (its plan, overriding the
+    ``plan`` argument) and any telemetry-calibrated link corrections; by
+    default one is built from ``plan``.  Either way the model is rebased
+    onto ``cluster`` — compute charges read ``cluster.devices`` directly,
+    so comm must price against the same topology or the SimResult would
+    silently mix believed and true clusters."""
+    if cost_model is not None:
+        model = cost_model.with_cluster(cluster)
+    else:
+        model = EdgeCostModel(graph, profiles, cluster,
+                              plan or plan_none(graph, schedule.placement))
 
     def run_pass(backward: bool, t0: float, events, device_free, busy):
         stages, comp, edges, nbytes = _stage_tables(
-            graph, profiles, schedule, cluster, plan, backward)
+            graph, profiles, schedule, cluster, model, backward)
         k = len(stages)
         order = list(range(k - 1, -1, -1)) if backward else list(range(k))
         in_edges: Dict[int, List[Tuple[int, float, int]]] = {}
@@ -384,15 +399,21 @@ def simulate_migration(transfers: Mapping[Tuple[Optional[int], int], float],
 
 def pipeline_fill_seconds(graph: OpGraph, profiles: Mapping[str, OpProfile],
                           schedule: Schedule, cluster: ClusterSpec,
-                          plan: Optional[CompressionPlan] = None) -> float:
+                          plan: Optional[CompressionPlan] = None,
+                          cost_model: Optional[EdgeCostModel] = None) -> float:
     """Fill cost of a cold pipeline: one micro-batch traversing every stage
     sequentially, FP + BP (the Σ_p (C_p + R_p) term of Eq. 3).  Charged by
     the elastic controller after every re-plan — a fresh schedule starts with
-    an empty pipeline."""
-    plan = plan or plan_none(graph, schedule.placement)
+    an empty pipeline.  ``cost_model`` is rebased onto ``cluster`` exactly as
+    in :func:`simulate_iteration`."""
+    if cost_model is not None:
+        model = cost_model.with_cluster(cluster)
+    else:
+        model = EdgeCostModel(graph, profiles, cluster,
+                              plan or plan_none(graph, schedule.placement))
     total = 0.0
     for backward in (False, True):
         _, comp, edges, _ = _stage_tables(graph, profiles, schedule, cluster,
-                                          plan, backward)
+                                          model, backward)
         total += sum(comp) + sum(t for (_, _, t, _) in edges)
     return total

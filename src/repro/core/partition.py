@@ -87,45 +87,67 @@ def partition_equal_compute(graph: OpGraph, profiles: Mapping[str, OpProfile],
     return attach_sources(graph, _segments_to_assignment(order, cuts))
 
 
-def partition_min_bottleneck(graph: OpGraph, profiles: Mapping[str, OpProfile],
-                             cluster: ClusterSpec,
-                             device_order: Sequence[int],
-                             edge_bytes_scale: Optional[Mapping[int, float]] = None,
-                             ) -> Tuple[List[List[str]], float]:
-    """DP over contiguous splits of the chain onto ``device_order`` (a
-    permutation/subset of CompNodes, in pipeline-stage order), minimizing
-    Eq. 3's steady-state pace  max_k max(C_k, R_k).
+def min_bottleneck_chain(ops: Sequence[str],
+                         profiles: Mapping[str, OpProfile],
+                         cluster: ClusterSpec,
+                         device_order: Sequence[int],
+                         cost_model,
+                         inbound: Optional[Tuple[str, int]] = None,
+                         ) -> Tuple[List[List[str]], float]:
+    """DP over contiguous splits of ``ops`` (a chain slice, in chain order)
+    onto ``device_order``, minimizing Eq. 3's steady-state pace
+    ``max_k max(C_k, R_k)``.  Returns raw segments (no source attachment).
 
     R_k is the time stage k spends receiving its boundary activation from
-    stage k-1 over the (device_order[k-1] -> device_order[k]) link;
-    ``edge_bytes_scale[k]`` optionally shrinks that edge's bytes (compression).
+    stage k-1 over the (device_order[k-1] -> device_order[k]) link; the
+    boundary edge is the op pair straddling the cut, and its bytes/seconds
+    come from the unified ``cost_model`` — so a compression-plan-bearing
+    model re-cuts under *compressed* costs, which replaced the old
+    stage-indexed ``edge_bytes_scale`` hack.
+
+    ``inbound = (producer_op, src_device)`` charges stage 0 for receiving
+    ``producer_op``'s boundary from ``src_device`` — used by the
+    boundary-pinned elastic re-cut, where a sub-chain's first stage still
+    pays for the (frozen) cross-cluster edge feeding it.
 
     DP state: best[i][k] = minimal pace for placing first i ops on first k+1
     devices.  O(n² · d) — fine for n ≤ a few thousand ops.
     """
-    order = chain(graph)
+    order = list(ops)
     n = len(order)
     d = len(device_order)
     if d > n:
         raise ValueError(f"{d} stages > {n} ops")
     flops = np.array([profiles[m].fwd_flops for m in order], dtype=np.float64)
-    outb = np.array([profiles[m].out_bytes for m in order], dtype=np.float64)
     pre = np.concatenate([[0.0], np.cumsum(flops)])
+    # boundary edge at cut position i: producer order[i-1] -> consumer
+    # order[i]; transport seconds for every stage pair, precomputed once
+    recv_cache: Dict[Tuple[int, int], float] = {}
 
     def comp_time(i: int, j: int, k: int) -> float:  # ops [i,j) on stage k
         return (pre[j] - pre[i]) / cluster.devices[device_order[k]].speed
 
     def recv_time(i: int, k: int) -> float:  # boundary into stage k at op i
-        if k == 0 or i == 0:
+        if k == 0:
+            if inbound is None or i != 0:
+                return 0.0
+            prod, src = inbound
+            return cost_model.edge_seconds(prod, order[0], src,
+                                           device_order[0])
+        if i == 0:
             return 0.0
-        nbytes = outb[i - 1] * (edge_bytes_scale or {}).get(k, 1.0)
-        return cluster.comm_time(device_order[k - 1], device_order[k], nbytes)
+        key = (i, k)
+        if key not in recv_cache:
+            recv_cache[key] = cost_model.edge_seconds(
+                order[i - 1], order[i],
+                device_order[k - 1], device_order[k])
+        return recv_cache[key]
 
     INF = float("inf")
     best = np.full((n + 1, d), INF)
     back = np.full((n + 1, d), -1, dtype=np.int64)
     for j in range(1, n - d + 2):
-        best[j][0] = comp_time(0, j, 0)
+        best[j][0] = max(comp_time(0, j, 0), recv_time(0, 0))
     for k in range(1, d):
         for j in range(k + 1, n - (d - 1 - k) + 1):
             for i in range(k, j):
@@ -146,5 +168,22 @@ def partition_min_bottleneck(graph: OpGraph, profiles: Mapping[str, OpProfile],
         cuts.append(j)
         k -= 1
     cuts = sorted(cuts)
-    return (attach_sources(graph, _segments_to_assignment(order, cuts)),
-            float(best[n][d - 1]))
+    return _segments_to_assignment(order, cuts), float(best[n][d - 1])
+
+
+def partition_min_bottleneck(graph: OpGraph, profiles: Mapping[str, OpProfile],
+                             cluster: ClusterSpec,
+                             device_order: Sequence[int],
+                             cost_model=None,
+                             ) -> Tuple[List[List[str]], float]:
+    """Min-bottleneck DP over the whole op chain (see
+    :func:`min_bottleneck_chain`), with placeholders/variables attached to
+    their consumers' segments.  ``cost_model`` defaults to dense transport;
+    pass a plan-bearing :class:`repro.core.costmodel.EdgeCostModel` to cut
+    under compressed byte costs (the OP-Fence/AdaTopK co-planner does)."""
+    if cost_model is None:
+        from .costmodel import EdgeCostModel   # late: costmodel imports core
+        cost_model = EdgeCostModel(graph, profiles, cluster)
+    segs, pace = min_bottleneck_chain(chain(graph), profiles, cluster,
+                                      device_order, cost_model)
+    return attach_sources(graph, segs), pace

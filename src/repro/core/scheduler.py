@@ -21,6 +21,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .compression import CompressionPlan, plan_adatopk
+from .costmodel import EdgeCostModel
 from .estimator import ClusterSpec
 from .opgraph import OpGraph, OpProfile, build_subdags, SubDag
 from .partition import (partition_equal_compute, partition_equal_number,
@@ -150,22 +152,41 @@ def _to_full_assignment(segments: List[List[str]], stage_devices: Sequence[int],
     return assignment, stages
 
 
-def _usable_parts(graph: OpGraph, cluster: ClusterSpec) -> int:
-    return max(1, min(len(cluster), len(op_chain(graph))))
+def _resolve_subset(cluster: ClusterSpec,
+                    device_subset: Optional[Sequence[int]]) -> List[int]:
+    """Validated CompNode subset, ascending (full cluster when None)."""
+    if device_subset is None:
+        return list(range(len(cluster)))
+    subset = sorted(set(int(d) for d in device_subset))
+    if not subset:
+        raise ValueError("device_subset must name at least one CompNode")
+    if subset[0] < 0 or subset[-1] >= len(cluster):
+        raise ValueError("device_subset out of range")
+    return subset
 
 
-def schedule_equal_number(graph: OpGraph, cluster: ClusterSpec) -> Schedule:
-    n = _usable_parts(graph, cluster)
+def schedule_equal_number(graph: OpGraph, cluster: ClusterSpec,
+                          device_subset: Optional[Sequence[int]] = None,
+                          ) -> Schedule:
+    """Baseline 1.  ``device_subset`` restricts placement to the listed
+    CompNodes (index order) — baselines must not silently schedule onto dead
+    nodes in churn experiments."""
+    devs = _resolve_subset(cluster, device_subset)
+    n = max(1, min(len(devs), len(op_chain(graph))))
     segs = partition_equal_number(graph, n)
-    a, s = _to_full_assignment(segs, list(range(n)), len(cluster))
+    a, s = _to_full_assignment(segs, devs[:n], len(cluster))
     return Schedule(assignment=a, stages=s)
 
 
 def schedule_equal_compute(graph: OpGraph, profiles: Mapping[str, OpProfile],
-                           cluster: ClusterSpec) -> Schedule:
-    n = _usable_parts(graph, cluster)
+                           cluster: ClusterSpec,
+                           device_subset: Optional[Sequence[int]] = None,
+                           ) -> Schedule:
+    """Baseline 2; ``device_subset`` as in :func:`schedule_equal_number`."""
+    devs = _resolve_subset(cluster, device_subset)
+    n = max(1, min(len(devs), len(op_chain(graph))))
     segs = partition_equal_compute(graph, profiles, n)
-    a, s = _to_full_assignment(segs, list(range(n)), len(cluster))
+    a, s = _to_full_assignment(segs, devs[:n], len(cluster))
     return Schedule(assignment=a, stages=s)
 
 
@@ -206,28 +227,25 @@ def _order_clusters(clusters: List[List[int]], bw: np.ndarray) -> List[int]:
 
 def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
                      cluster: ClusterSpec, seed: int = 0,
-                     edge_bytes_scale: Optional[Mapping[int, float]] = None,
+                     cost_model: Optional[EdgeCostModel] = None,
                      device_subset: Optional[Sequence[int]] = None,
                      ) -> Schedule:
     """The OP-Fence scheduler.
 
-    ``edge_bytes_scale`` (stage-index -> scale) lets the broker re-schedule
-    under a compression plan (AdaTopK shrinks the slowest edges, which can
-    change the optimal split).
+    ``cost_model`` is the unified byte/seconds source the DP split reads; a
+    plan-bearing :class:`repro.core.costmodel.EdgeCostModel` re-schedules
+    under that compression plan (AdaTopK shrinks the slowest edges, which can
+    change the optimal split — the :func:`schedule_joint` co-planner iterates
+    exactly this loop).  Defaults to dense transport.
 
     ``device_subset`` restricts placement to the listed CompNodes (the elastic
     runtime re-plans on the survivors after churn); the returned Schedule
     still spans the full device index space, with excluded CompNodes empty.
     """
     bw = cluster.bandwidth_matrix()
-    if device_subset is None:
-        subset = list(range(len(cluster)))
-    else:
-        subset = sorted(set(int(d) for d in device_subset))
-        if not subset:
-            raise ValueError("device_subset must name at least one CompNode")
-        if subset[0] < 0 or subset[-1] >= len(cluster):
-            raise ValueError("device_subset out of range")
+    subset = _resolve_subset(cluster, device_subset)
+    if cost_model is None:
+        cost_model = EdgeCostModel(graph, profiles, cluster)
     # Louvain on the surviving sub-graph, communities mapped back to the
     # original CompNode indices so link lookups stay in the full topology.
     sub_bw = bw[np.ix_(subset, subset)]
@@ -244,14 +262,84 @@ def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
     device_order = device_order[:max(1, min(len(device_order), n_ops))]
     segs, pace = partition_min_bottleneck(graph, profiles, cluster,
                                           device_order,
-                                          edge_bytes_scale=edge_bytes_scale)
+                                          cost_model=cost_model)
     a, s = _to_full_assignment(segs, device_order, len(cluster))
     return Schedule(assignment=a, stages=s,
                     clusters=[clusters[c] for c in order], predicted_pace=pace)
 
 
+# ---------------------------------------------------- joint co-planning ----
+@dataclasses.dataclass
+class JointPlan:
+    """Converged output of :func:`schedule_joint`: the schedule, the AdaTopK
+    plan it was cut under, the plan-bearing cost model (single source of
+    truth for every downstream byte account), and how the fixed point ran."""
+
+    schedule: Schedule
+    plan: CompressionPlan
+    cost_model: EdgeCostModel
+    predicted_pace: float
+    iterations: int
+    converged: bool
+
+
+def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
+                   cluster: ClusterSpec, ratio: float = 100.0,
+                   encoding: str = "paper", seed: int = 0,
+                   device_subset: Optional[Sequence[int]] = None,
+                   max_rounds: int = 4) -> JointPlan:
+    """OP-Fence × AdaTopK fixed-point co-planner.
+
+    The blind pipeline (schedule on dense bytes, then compress) is
+    sub-optimal whenever compression changes which cut is
+    bottleneck-limiting: AdaTopK shrinks the slowest edges by up to the
+    encoding factor, so a cut that avoided a WAN boundary at dense costs may
+    afford it compressed — and vice versa.  This iterates
+
+        schedule (under current edge costs) → plan_adatopk → re-cost
+
+    to convergence (identical assignment) or ``max_rounds``, and returns the
+    best (schedule, plan) pair seen, scored by the unified model's Eq. 3
+    steady-state pace.  Round 0 *is* the sequential schedule-then-compress
+    baseline, so the result is never worse than it under the shared metric.
+    """
+    dense_model = EdgeCostModel(graph, profiles, cluster)
+    sched = schedule_opfence(graph, profiles, cluster, seed=seed,
+                             cost_model=dense_model,
+                             device_subset=device_subset)
+    best: Optional[JointPlan] = None
+    seen_assignments = []
+    converged = False
+    for it in range(max_rounds):
+        plan = plan_adatopk(graph, profiles, cluster, sched.placement, ratio,
+                            encoding=encoding, cost_model=dense_model)
+        model = dense_model.with_plan(plan)
+        pace = model.stage_pace(sched)
+        if best is None or pace < best.predicted_pace:
+            best = JointPlan(schedule=sched, plan=plan, cost_model=model,
+                             predicted_pace=pace, iterations=it + 1,
+                             converged=False)
+        if sched.assignment in seen_assignments:
+            converged = True       # fixed point (or 2-cycle) reached
+            break
+        seen_assignments.append(sched.assignment)
+        if it == max_rounds - 1:
+            break                  # a re-cut now would never be scored
+        sched = schedule_opfence(graph, profiles, cluster, seed=seed,
+                                 cost_model=model,
+                                 device_subset=device_subset)
+    best.converged = converged
+    best.schedule = dataclasses.replace(
+        best.schedule, predicted_pace=best.predicted_pace)
+    return best
+
+
 SCHEDULERS = {
-    "equal_number": lambda g, prof, cl, **kw: schedule_equal_number(g, cl),
-    "equal_compute": lambda g, prof, cl, **kw: schedule_equal_compute(g, prof, cl),
+    "equal_number":
+        lambda g, prof, cl, **kw: schedule_equal_number(g, cl, **kw),
+    "equal_compute":
+        lambda g, prof, cl, **kw: schedule_equal_compute(g, prof, cl, **kw),
     "opfence": lambda g, prof, cl, **kw: schedule_opfence(g, prof, cl, **kw),
+    "joint": lambda g, prof, cl, **kw: schedule_joint(g, prof, cl,
+                                                      **kw).schedule,
 }

@@ -101,18 +101,21 @@ def estimate_iteration(graph: OpGraph,
                        placement: Mapping[str, int],
                        n_micro: int,
                        batch_size: int,
-                       compress_ratio: Optional[Mapping[Tuple[str, str], float]] = None,
-                       index_overhead: float = 3.0) -> IterationEstimate:
-    """End-to-end Eq. 2–4 (and, with ``compress_ratio``, Eq. 8) estimate.
+                       cost_model=None) -> IterationEstimate:
+    """End-to-end Eq. 2–4 (and, with a plan-bearing ``cost_model``, Eq. 8)
+    estimate.
 
     BP communication mirrors FP (boundary gradients have the same size as the
     forward activations they correspond to) and BP compute uses the standard
     2× forward approximation — both per the paper's symmetric DAG treatment.
+    Compression enters through the unified
+    :class:`repro.core.costmodel.EdgeCostModel` (exact wire encoding), which
+    replaced the removed smooth ``compress_ratio`` approximation.
     """
     fwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, index_overhead, backward=False)
+                            cost_model, backward=False)
     bwd = estimate_op_costs(graph, profiles, cluster, placement,
-                            compress_ratio, index_overhead, backward=True)
+                            cost_model, backward=True)
     n = len(cluster)
     return IterationEstimate(
         fwd_loads=tuple(node_loads(fwd, placement, n)),

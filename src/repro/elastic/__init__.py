@@ -16,8 +16,8 @@ from .membership import (ChurnEvent, ChurnTrace, MembershipDelta,
                          MembershipView, single_failure_trace)
 from .detector import StragglerDetector
 from .telemetry import TelemetryLog
-from .replan import (MigrationPlan, OpMove, ReplanResult, diff_schedules,
-                     interim_schedule, replan, state_bytes)
+from .replan import (MigrationPlan, OpMove, ReplanResult, cross_cluster_bytes,
+                     diff_schedules, interim_schedule, replan, state_bytes)
 from .migrate import (apply_moves, assert_bitexact, extract_op_state,
                       pack_op_state, trees_bitexact, unpack_op_state)
 from .controller import (ElasticController, ElasticRunResult, EpochRecord,

@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.checkpoint import deserialize_state, serialize_state
 from repro.core.compression import CompressionPlan, plan_none
+from repro.core.costmodel import EdgeCostModel
 from repro.core.estimator import ClusterSpec, predict_step_times
 from repro.core.executor import (DecentralizedRuntime, TelemetrySink,
                                  pipeline_fill_seconds, simulate_iteration,
@@ -184,6 +185,7 @@ class ElasticController:
                  amortize_steps: float = 100.0,
                  migration_mode: str = "stop",
                  overlap_bandwidth_share: float = 0.75,
+                 pin_boundaries: bool = False,
                  use_kernel: bool = False,
                  initial_alive: Optional[Sequence[int]] = None):
         if migration_mode not in ("stop", "overlap"):
@@ -203,6 +205,7 @@ class ElasticController:
         self.amortize_steps = float(amortize_steps)
         self.migration_mode = migration_mode
         self.overlap_bandwidth_share = float(overlap_bandwidth_share)
+        self.pin_boundaries = bool(pin_boundaries)
         self.use_kernel = use_kernel
         self._det_cfg = dict(alpha=detector_alpha,
                              threshold=detector_threshold,
@@ -270,9 +273,16 @@ class ElasticController:
         self.runtime = DecentralizedRuntime(self.graph, self.schedule,
                                             self.plan,
                                             use_kernel=self.use_kernel)
+        # the detector's reference prediction must share the epoch's
+        # compression plan with the telemetry it is compared against — a
+        # dense reference over-predicts comm on compressed edges and lets a
+        # genuinely slowed node hide below threshold
         self.detector = StragglerDetector(
             predict_step_times(self.graph, self.profiles, believed,
-                               placement),
+                               placement,
+                               cost_model=EdgeCostModel(
+                                   self.graph, self.profiles, believed,
+                                   self.plan)),
             **self._det_cfg)
         self.epoch_records.append(EpochRecord(
             epoch=len(self.epoch_records), at_step=at_step, clock=self.clock,
@@ -615,9 +625,16 @@ class ElasticController:
                 joined: Sequence[int] = ()) -> ReplanResult:
         for d in dead:
             self.believed_factors.pop(d, None)
-        return replan(self.graph, self.profiles, self.believed_cluster(),
+        believed = self.believed_cluster()
+        # re-plan under the epoch's compression plan: boundaries that persist
+        # across the re-cut keep their compressed byte costs (edges the old
+        # plan never keyed fall back to dense — the next epoch's plan_factory
+        # re-compresses them)
+        model = EdgeCostModel(self.graph, self.profiles, believed, self.plan)
+        return replan(self.graph, self.profiles, believed,
                       self.schedule, alive=self.membership.alive, dead=dead,
                       joined=joined, seed=self.seed,
                       opt_state_mult=self.opt_state_mult,
-                      mode=self.replan_mode,
-                      amortize_steps=self.amortize_steps)
+                      cost_model=model, mode=self.replan_mode,
+                      amortize_steps=self.amortize_steps,
+                      pin_boundaries=self.pin_boundaries)

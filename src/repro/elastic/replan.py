@@ -13,20 +13,29 @@ Migration payloads are never lossy-compressed: AdaTopK is for per-step
 boundary tensors where error feedback and training itself absorb the loss;
 migrated parameters/optimizer state must land bit-exact or the loss curve
 jumps (see migrate.py).
+
+``pin_boundaries=True`` hardens the anchored candidate: segment boundaries
+are frozen at the old schedule's inter-cluster (WAN) cuts, and the DP re-cut
+runs independently inside each bandwidth cluster — so no op (hence no
+parameter/optimizer shard) ever migrates across a WAN link, the exact
+traffic class overlapped migration cannot hide (the stream rides the same
+wire the pipeline is bottlenecked by).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from repro.core.costmodel import EdgeCostModel
 from repro.core.estimator import ClusterSpec, LinkSpec
 from repro.core.executor import (CHECKPOINT_LINK, MigrationSim,
                                  simulate_migration)
 from repro.core.opgraph import OpGraph, OpProfile
 from repro.core.opgraph import chain as op_chain
-from repro.core.partition import partition_min_bottleneck
+from repro.core.partition import (attach_sources, min_bottleneck_chain,
+                                  partition_min_bottleneck)
 from repro.core.scheduler import (Schedule, _to_full_assignment,
-                                  schedule_opfence)
+                                  louvain_communities, schedule_opfence)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,7 +155,7 @@ def interim_schedule(graph: OpGraph, old: Schedule, dead: Sequence[int],
 def _anchored_schedule(graph: OpGraph, profiles: Mapping[str, OpProfile],
                        cluster: ClusterSpec, old_schedule: Schedule,
                        alive: Sequence[int], joined: Sequence[int],
-                       edge_bytes_scale: Optional[Mapping[int, float]]
+                       cost_model: Optional[EdgeCostModel]
                        ) -> Optional[Schedule]:
     """Stability-preferring candidate: keep the surviving stage order from
     the old schedule (append joiners at the tail) and re-run only the DP
@@ -163,8 +172,169 @@ def _anchored_schedule(graph: OpGraph, profiles: Mapping[str, OpProfile],
     if not order:
         return None
     segs, pace = partition_min_bottleneck(graph, profiles, cluster, order,
-                                          edge_bytes_scale=edge_bytes_scale)
+                                          cost_model=cost_model)
     a, s = _to_full_assignment(segs, order, len(cluster))
+    return Schedule(assignment=a, stages=s, clusters=old_schedule.clusters,
+                    predicted_pace=pace)
+
+
+def _communities_for(cluster: ClusterSpec,
+                     old_schedule: Schedule) -> List[List[int]]:
+    """Bandwidth communities the WAN fences sit between: the old schedule's
+    Louvain clusters when recorded, else a fresh Louvain pass over the full
+    bandwidth matrix (devices the schedule never saw land in their natural
+    community)."""
+    if old_schedule.clusters:
+        return [list(c) for c in old_schedule.clusters]
+    return louvain_communities(cluster.bandwidth_matrix())
+
+
+def _extend_communities(cluster: ClusterSpec,
+                        communities: List[List[int]],
+                        devices: Sequence[int]) -> List[List[int]]:
+    """Map devices absent from the recorded communities (the old schedule
+    was cut on a survivor subset) into the recorded community their
+    full-matrix Louvain community overlaps most — i.e. the site they
+    physically sit in.  A device whose full community shares no member with
+    any recorded one belongs to a genuinely unseen site and stays unmapped
+    (the caller must not place it: there is no fence to keep it behind)."""
+    known = {d for c in communities for d in c}
+    missing = [int(d) for d in devices if int(d) not in known]
+    if not missing:
+        return communities
+    full = louvain_communities(cluster.bandwidth_matrix())
+    out = [list(c) for c in communities]
+    for d in missing:
+        fc = next((set(c) for c in full if d in c), set())
+        overlap, best = 0, None
+        for ci, c in enumerate(out):
+            ov = len(fc & set(c) & known)
+            if ov > overlap:
+                overlap, best = ov, ci
+        if best is not None:
+            out[best].append(d)
+    return out
+
+
+def cross_cluster_bytes(moves: Sequence[OpMove],
+                        communities: Sequence[Sequence[int]]) -> float:
+    """Migration bytes that ride an inter-cluster (WAN) link.  Checkpoint
+    streams (``src=None``) are excluded — the broker store is not a WAN
+    peer, and a dead node's shard has to stream from it regardless.  A
+    device absent from ``communities`` cannot be proven co-located with
+    anything, so transfers touching it count as crossing (conservative:
+    this metric must never under-report the traffic pinning forbids)."""
+    comm_of = {d: ci for ci, c in enumerate(communities) for d in c}
+
+    def crosses(m: OpMove) -> bool:
+        cs, cd = comm_of.get(m.src), comm_of.get(m.dst)
+        return cs is None or cd is None or cs != cd
+
+    return float(sum(m.nbytes for m in moves
+                     if m.src is not None and crosses(m)))
+
+
+def _pinned_anchored_schedule(graph: OpGraph,
+                              profiles: Mapping[str, OpProfile],
+                              cluster: ClusterSpec, old_schedule: Schedule,
+                              alive: Sequence[int], joined: Sequence[int],
+                              cost_model: Optional[EdgeCostModel]
+                              ) -> Optional[Schedule]:
+    """Boundary-pinned anchored candidate (closes the ROADMAP open item).
+
+    The plain anchored candidate re-runs one DP over the whole chain, so a
+    segment boundary can drift across the inter-cluster WAN link — exactly
+    the migration traffic that cannot be hidden by overlapping (the bulk
+    stream contends with the pipeline's own bottleneck wire).  Here the old
+    schedule's cut positions at community boundaries are *frozen*: the chain
+    is sliced at every point where consecutive old stages sit in different
+    bandwidth clusters, surviving devices keep their old order inside each
+    slice, and the min-bottleneck DP re-cuts each slice independently
+    (charging the first stage of a slice for the pinned WAN edge feeding
+    it).  Every op therefore stays inside its old community — zero
+    cross-cluster migration bytes by construction.  A community whose
+    devices all died merges its slice into the previous (else next) slice:
+    that traffic is unavoidable.
+    """
+    if cost_model is None:
+        cost_model = EdgeCostModel(graph, profiles, cluster)
+    alive_set = set(int(a) for a in alive)
+    communities = _extend_communities(
+        cluster, _communities_for(cluster, old_schedule), joined)
+    comm_of = {d: ci for ci, c in enumerate(communities) for d in c}
+    order = list(op_chain(graph))
+    pos = {op: i for i, op in enumerate(order)}
+
+    # community runs over the old stage order, each with its chain slice
+    runs: List[Dict[str, Any]] = []   # {comm, devices(alive), n_ops}
+    for dev in old_schedule.stage_devices():
+        n_ops = sum(1 for op in old_schedule.assignment[dev] if op in pos)
+        c = comm_of.get(dev)
+        if not runs or runs[-1]["comm"] != c:
+            runs.append({"comm": c, "devices": [], "n_ops": 0})
+        runs[-1]["n_ops"] += n_ops
+        if dev in alive_set:
+            runs[-1]["devices"].append(dev)
+    if not runs:
+        return None
+    # joiners ride with their own community's run — only.  Unrecorded
+    # joiners were mapped into the recorded community their site overlaps
+    # (``_extend_communities``); one from a genuinely unseen site, or whose
+    # community holds no pipeline slice, is *not* placed here: feeding it
+    # state would cross a community boundary, the exact traffic class
+    # pinning exists to forbid.  Under a pinned controller such a device
+    # stays idle until the operator re-plans un-pinned — by construction
+    # there is no fence-respecting way to stream state to it.
+    seen = {d for r in runs for d in r["devices"]}
+    for j in joined:
+        j = int(j)
+        if j not in alive_set or j in seen:
+            continue
+        host = next((r for r in runs if r["comm"] == comm_of.get(j)
+                     and comm_of.get(j) is not None), None)
+        if host is None:
+            continue
+        host["devices"].append(j)
+        seen.add(j)
+    # a run whose devices all died merges into its predecessor (else
+    # successor) — cross-WAN movement of that slice is unavoidable
+    merged: List[Dict[str, Any]] = []
+    for r in runs:
+        if r["devices"] or not merged:
+            merged.append(r)
+        else:
+            merged[-1]["n_ops"] += r["n_ops"]
+    while merged and not merged[0]["devices"]:
+        if len(merged) == 1:
+            return None
+        merged[1]["n_ops"] += merged[0]["n_ops"]
+        merged.pop(0)
+
+    segments: List[List[str]] = []
+    stage_devs: List[int] = []
+    pace = 0.0
+    lo = 0
+    prev_dev: Optional[int] = None
+    for r in merged:
+        hi = lo + r["n_ops"]
+        ops = order[lo:hi]
+        if not ops:
+            lo = hi
+            continue
+        devs = r["devices"][:len(ops)]
+        inbound = (order[lo - 1], prev_dev) \
+            if lo > 0 and prev_dev is not None else None
+        segs, run_pace = min_bottleneck_chain(ops, profiles, cluster, devs,
+                                              cost_model, inbound=inbound)
+        segments.extend(segs)
+        stage_devs.extend(devs)
+        pace = max(pace, run_pace)
+        prev_dev = devs[-1]
+        lo = hi
+    if not stage_devs:
+        return None
+    segments = attach_sources(graph, segments)
+    a, s = _to_full_assignment(segments, stage_devs, len(cluster))
     return Schedule(assignment=a, stages=s, clusters=old_schedule.clusters,
                     predicted_pace=pace)
 
@@ -175,8 +345,9 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
            joined: Sequence[int] = (), seed: int = 0,
            opt_state_mult: float = 2.0,
            checkpoint_link: LinkSpec = CHECKPOINT_LINK,
-           edge_bytes_scale: Optional[Mapping[int, float]] = None,
-           mode: str = "auto", amortize_steps: float = 100.0
+           cost_model: Optional[EdgeCostModel] = None,
+           mode: str = "auto", amortize_steps: float = 100.0,
+           pin_boundaries: bool = False
            ) -> ReplanResult:
     """Incremental re-scheduling with a migration-aware candidate choice.
 
@@ -193,19 +364,39 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
     restricts placement; ``dead`` marks nodes whose state is unrecoverable
     from the node itself; ``joined`` lists newly admitted CompNodes (the
     anchored candidate appends them at the pipeline tail).
+
+    ``cost_model`` routes every byte account (DP re-cut, OP-Fence) through
+    the unified :class:`repro.core.costmodel.EdgeCostModel` — pass a
+    plan-bearing model to re-plan under compressed edge costs.
+    ``pin_boundaries=True`` replaces the anchored candidate's chain-wide DP
+    with the boundary-pinned per-cluster form
+    (:func:`_pinned_anchored_schedule`) **and drops the unconstrained
+    ``full`` candidate** — a from-scratch OP-Fence pass moves state across
+    the WAN freely, which would silently void the zero-cross-WAN guarantee
+    the flag exists for (``mode='full'`` is therefore rejected).
     """
     if mode not in ("auto", "full", "anchored"):
         raise ValueError(f"unknown replan mode {mode!r}")
+    if pin_boundaries and mode == "full":
+        raise ValueError("pin_boundaries is incompatible with mode='full' — "
+                         "the full re-plan cannot honor the pinned WAN cuts")
     candidates: Dict[str, Schedule] = {}
-    if mode in ("auto", "full"):
-        candidates["full"] = schedule_opfence(
-            graph, profiles, cluster, seed=seed,
-            edge_bytes_scale=edge_bytes_scale, device_subset=alive)
     if mode in ("auto", "anchored"):
-        anchored = _anchored_schedule(graph, profiles, cluster, old_schedule,
-                                      alive, joined, edge_bytes_scale)
+        anchor_fn = _pinned_anchored_schedule if pin_boundaries \
+            else _anchored_schedule
+        anchored = anchor_fn(graph, profiles, cluster, old_schedule,
+                             alive, joined, cost_model)
         if anchored is not None:
             candidates["anchored"] = anchored
+    # the full candidate is suppressed while pinning EXCEPT as the auto-mode
+    # fallback when no pinned candidate exists — that only happens when every
+    # old stage host is gone, where all state comes from the checkpoint store
+    # (src=None) and a fresh OP-Fence pass cannot move bytes across the WAN
+    if mode in ("auto", "full") and \
+            (not pin_boundaries or (mode == "auto" and not candidates)):
+        candidates["full"] = schedule_opfence(
+            graph, profiles, cluster, seed=seed,
+            cost_model=cost_model, device_subset=alive)
     if not candidates:
         raise RuntimeError("no feasible re-plan candidate")
 

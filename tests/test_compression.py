@@ -162,6 +162,51 @@ def test_adatopk_never_inflates_wire_bytes(encoding):
         assert all(r_i > be for r_i in plan.edge_ratio.values())
 
 
+def test_adatopk_bf16_dense_guard_uses_producer_itemsize():
+    """Regression (dtype hard-coding): the dense-payload guard compared the
+    wire size against ``numel * 4``, so a bf16 boundary (2 bytes/elem) kept
+    ratios in (3, 5] whose paper encoding — k·(2+8) bytes — *inflates* wire
+    traffic past the 2-byte dense payload.  Itemsize now comes from the
+    producer's profile: with the legacy uniform ``index_overhead=3.0`` knob
+    the inflating band is clamped to dense, and with the default per-edge
+    coefficient a bf16 edge gets Eq. 7's overhead·r at ITS overhead (5), so
+    it both compresses and hits the requested wire-byte target."""
+    from repro.core.costmodel import EdgeCostModel
+    import sys
+    sys.path.insert(0, "tests")
+    from helpers import mlp_chain
+    g, shapes, _, _ = mlp_chain(n_layers=6, d=64, batch=8)
+    prof16 = g.annotate(shapes, activation_itemsize=2)     # bf16 boundaries
+    prof32 = g.annotate(shapes, activation_itemsize=4)
+    cluster = network.homogeneous_lan(n=2, bandwidth_Bps=1e8, alpha=1e-3)
+    order = [n for n in g.topo_order()]
+    placement = {n: (0 if i < len(order) // 2 else 1)
+                 for i, n in enumerate(order)}
+    # legacy fp32 coefficient: the slowest edge's raw ratio is 3r = 4.2 —
+    # genuinely compressing for fp32, inside the inflating band for bf16
+    r = 1.4
+    plan32 = plan_adatopk(g, prof32, cluster, placement, r,
+                          index_overhead=3.0)
+    plan16 = plan_adatopk(g, prof16, cluster, placement, r,
+                          index_overhead=3.0)
+    assert plan32.edge_ratio            # fp32 genuinely compresses at 4.2
+    assert plan16.edge_ratio == {}      # bf16 must send dense instead
+    # default per-edge coefficient: the same bf16 edge is planned at 5r = 7
+    # (its own overhead factor) and shrinks below its 2-byte dense payload
+    plan16d = plan_adatopk(g, prof16, cluster, placement, r)
+    assert plan16d.edge_ratio
+    m = EdgeCostModel(g, prof16, cluster, plan16d)
+    for (a, n), r_i in plan16d.edge_ratio.items():
+        assert r_i == pytest.approx(5.0 * r)
+        assert m.edge_wire_bytes(a, n) < prof16[a].out_bytes
+    # and at any ratio, planned bf16 edges never exceed their dense size
+    plan16b = plan_adatopk(g, prof16, cluster, placement, 10.0)
+    assert plan16b.edge_ratio
+    m = EdgeCostModel(g, prof16, cluster, plan16b)
+    for (a, n) in plan16b.edge_ratio:
+        assert m.edge_wire_bytes(a, n) < prof16[a].out_bytes
+
+
 def test_boundary_compress_gradient_is_sparsified():
     x = jnp.asarray(np.random.default_rng(1).standard_normal(32), jnp.float32)
 

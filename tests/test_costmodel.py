@@ -1,0 +1,152 @@
+"""Unified EdgeCostModel: single source of truth for per-edge bytes/seconds.
+
+Pins the estimator and the discrete-event executor to the *same* byte
+arithmetic (the pre-cost-model code carried three inconsistent models:
+stage-indexed scales in partition.py, a smooth 3/r approximation in
+estimator.py, and the exact integer wire encoding in compression.py)."""
+import numpy as np
+import pytest
+
+from repro.core import (EdgeCostModel, fit_link_corrections, network,
+                        plan_adatopk, plan_uniform, schedule_opfence,
+                        simulate_iteration)
+from repro.core.compression import plan_none, wire_bytes
+from repro.core.estimator import predict_step_time_components
+from repro.core.executor import TelemetrySink
+from repro.core.opgraph import OpType
+from helpers import mlp_chain
+
+
+def _setup(ratio=None, n_layers=12, d=64, batch=8, itemsize=4):
+    g, shapes, params, inputs = mlp_chain(n_layers=n_layers, d=d, batch=batch)
+    prof = g.annotate(shapes, activation_itemsize=itemsize)
+    cluster = network.paper_testbed(1, seed=0)
+    sch = schedule_opfence(g, prof, cluster)
+    plan = plan_adatopk(g, prof, cluster, sch.placement, ratio) \
+        if ratio else None
+    return g, prof, cluster, sch, plan
+
+
+# ----------------------------------------------------------- model basics --
+def test_model_dense_matches_profiles_and_alpha_beta():
+    g, prof, cluster, sch, _ = _setup()
+    m = EdgeCostModel(g, prof, cluster)
+    placement = sch.placement
+    for (a, n) in m.cross_edges(placement):
+        assert m.edge_wire_bytes(a, n) == prof[a].out_bytes
+        src, dst = placement[a], placement[n]
+        assert m.edge_seconds(a, n, src, dst) == pytest.approx(
+            cluster.comm_time(src, dst, prof[a].out_bytes))
+    # co-located edges transport nothing
+    some_op = next(iter(g.nodes))
+    assert m.edge_seconds(some_op, some_op, 3, 3) == 0.0
+
+
+def test_model_plan_view_uses_exact_wire_encoding():
+    g, prof, cluster, sch, plan = _setup(ratio=100.0)
+    assert plan.edge_ratio            # something actually compressed
+    m = EdgeCostModel(g, prof, cluster, plan)
+    for (a, n), r in plan.edge_ratio.items():
+        numel = int(np.prod(prof[a].out_shape))
+        assert m.edge_wire_bytes(a, n) == wire_bytes(numel, r, plan.encoding)
+        assert m.edge_wire_bytes(a, n) < prof[a].out_bytes
+    # with_plan derives a variant without mutating the original
+    dense = m.with_plan(None)
+    (a, n) = next(iter(plan.edge_ratio))
+    assert dense.edge_wire_bytes(a, n) == prof[a].out_bytes
+    assert m.edge_wire_bytes(a, n) < prof[a].out_bytes
+
+
+def test_model_itemsize_derived_from_profile():
+    g, prof, cluster, sch, _ = _setup(itemsize=2)     # bf16 annotation
+    m = EdgeCostModel(g, prof, cluster)
+    op = [n for n, node in g.nodes.items()
+          if node.op_type is OpType.PARAMETRIC][0]
+    assert m.itemsize(op) == 2
+    assert m.dense_bytes(op) == prof[op].out_bytes
+
+
+def test_link_corrections_scale_seconds():
+    g, prof, cluster, sch, _ = _setup()
+    placement = sch.placement
+    m = EdgeCostModel(g, prof, cluster)
+    (a, n) = next(iter(m.cross_edges(placement)))
+    src, dst = placement[a], placement[n]
+    m2 = m.with_link_corrections({(src, dst): 2.0})
+    assert m2.edge_seconds(a, n, src, dst) == pytest.approx(
+        2.0 * m.edge_seconds(a, n, src, dst))
+    # other links untouched
+    others = [(p, c) for (p, c) in m.cross_edges(placement)
+              if (placement[p], placement[c]) != (src, dst)]
+    for (p, c) in others[:3]:
+        assert m2.edge_seconds(p, c, placement[p], placement[c]) == \
+            m.edge_seconds(p, c, placement[p], placement[c])
+
+
+def test_fit_link_corrections_recovers_known_scale():
+    cluster = network.homogeneous_lan(n=2, bandwidth_Bps=1e9, alpha=1e-3)
+    sizes = [1e6, 4e6, 16e6]
+    # the real link is 1.7x slower than the α–β fit believes
+    measured = {(0, 1): [(s, 1.7 * cluster.comm_time(0, 1, s))
+                         for s in sizes]}
+    corr = fit_link_corrections(measured, cluster)
+    assert corr[(0, 1)] == pytest.approx(1.7, rel=1e-9)
+    # clamped against pathological samples
+    wild = {(0, 1): [(s, 1e3 * cluster.comm_time(0, 1, s)) for s in sizes]}
+    assert fit_link_corrections(wild, cluster)[(0, 1)] == 4.0
+
+
+# ------------------------------------------- estimator/executor parity -----
+@pytest.mark.parametrize("ratio", [None, 100.0])
+def test_simulated_comm_seconds_pin_to_model_prediction(ratio):
+    """Acceptance: the executor's per-node simulated comm seconds equal the
+    estimator's prediction exactly — both read EdgeCostModel, so the old
+    drift between the smooth 3/r estimate and the integer wire encoding is
+    structurally gone (dense AND compressed)."""
+    g, prof, cluster, sch, plan = _setup(ratio=ratio)
+    n_micro = 2
+    sink = TelemetrySink()
+    simulate_iteration(g, prof, sch, cluster, plan, n_micro=n_micro,
+                       telemetry=sink)
+    obs_comm: dict = {}
+    for s in sink.samples:
+        obs_comm[s.node] = obs_comm.get(s.node, 0.0) + s.comm_seconds
+    model = EdgeCostModel(g, prof, cluster, plan)
+    pred = predict_step_time_components(g, prof, cluster, sch.placement,
+                                        cost_model=model)
+    for node, (comp, recv) in pred.items():
+        assert obs_comm.get(node, 0.0) / n_micro == pytest.approx(
+            recv, rel=1e-9, abs=1e-15), node
+
+
+def test_simulated_comm_bytes_pin_to_model(ratio=100.0):
+    g, prof, cluster, sch, plan = _setup(ratio=ratio)
+    n_micro = 3
+    sim = simulate_iteration(g, prof, sch, cluster, plan, n_micro=n_micro)
+    model = EdgeCostModel(g, prof, cluster, plan)
+    placement = sch.placement
+    expect = sum(model.edge_wire_bytes(a, n)
+                 for (a, n) in model.cross_edges(placement)
+                 if g.nodes[a].op_type not in (OpType.PLACEHOLDER,
+                                               OpType.VARIABLE))
+    assert sim.comm_bytes == pytest.approx(2 * n_micro * expect)  # FP + BP
+
+
+def test_stage_pace_matches_dp_objective():
+    """The model's derived stage view reproduces the DP's predicted pace on
+    the schedule the DP itself produced (chain graph: boundary edges are the
+    only cross-stage edges, so the two views coincide)."""
+    g, prof, cluster, sch, _ = _setup()
+    m = EdgeCostModel(g, prof, cluster)
+    assert m.stage_pace(sch) == pytest.approx(sch.predicted_pace, rel=1e-9)
+
+
+def test_uniform_plan_model_monotone_in_ratio():
+    g, prof, cluster, sch, _ = _setup()
+    placement = sch.placement
+    m100 = EdgeCostModel(g, prof, cluster,
+                         plan_uniform(g, placement, 100.0))
+    m1000 = EdgeCostModel(g, prof, cluster,
+                          plan_uniform(g, placement, 1000.0))
+    for (a, n) in m100.cross_edges(placement):
+        assert m1000.edge_wire_bytes(a, n) <= m100.edge_wire_bytes(a, n)

@@ -12,8 +12,9 @@ from repro.core.executor import simulate_migration
 from repro.core.scheduler import schedule_opfence
 from repro.elastic import (ChurnEvent, ChurnTrace, ElasticController,
                            MembershipView, StragglerDetector, apply_moves,
-                           diff_schedules, interim_schedule, replan,
-                           single_failure_trace, trees_bitexact)
+                           cross_cluster_bytes, diff_schedules,
+                           interim_schedule, replan, single_failure_trace,
+                           trees_bitexact)
 from repro.optim.optimizers import adamw, sgd
 from helpers import mlp_chain
 
@@ -140,6 +141,154 @@ def test_replan_auto_prefers_stability_when_pace_is_close():
                key=lambda r: r.migration.seconds
                + 100.0 * r.schedule.predicted_pace)
     assert auto.mode == best.mode
+
+
+def test_pinned_replan_moves_zero_bytes_across_wan():
+    """Acceptance (boundary-pinned re-cut): on the paper's two-cluster
+    testbed the plain anchored candidate shifts a segment boundary across
+    the inter-cluster WAN link after a failure — exactly the migration
+    traffic overlapping cannot hide — while ``pin_boundaries=True`` freezes
+    the WAN cuts and re-cuts each bandwidth cluster independently: zero
+    cross-WAN migration bytes by construction, at no loss of validity."""
+    from repro.elastic.replan import _communities_for
+    g, shapes, _, _ = mlp_chain(n_layers=16, d=64, batch=8)
+    prof = g.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    old = schedule_opfence(g, prof, cluster)
+    victim = old.stage_devices()[2]
+    alive = [d for d in range(len(cluster)) if d != victim]
+    comms = _communities_for(cluster, old)
+    unpinned = replan(g, prof, cluster, old, alive=alive, dead=[victim],
+                      mode="anchored")
+    pinned = replan(g, prof, cluster, old, alive=alive, dead=[victim],
+                    mode="anchored", pin_boundaries=True)
+    # the unpinned re-cut really does drag state over the WAN here
+    assert cross_cluster_bytes(unpinned.migration.moves, comms) > 0
+    assert cross_cluster_bytes(pinned.migration.moves, comms) == 0.0
+    # pinned schedule is a valid pipeline: all ops placed once, contiguous
+    # chain segments, Table-3 edge sets build, dead node holds nothing
+    new = pinned.schedule
+    assert new.assignment[victim] == []
+    placed = sorted(op for seg in new.assignment for op in seg)
+    assert placed == sorted(g.nodes)
+    order = {op: i for i, op in enumerate(chain(g))}
+    for seg in new.assignment:
+        idx = sorted(order[op] for op in seg if op in order)
+        assert idx == list(range(idx[0], idx[0] + len(idx))) if idx else True
+    new.pipeline_subdags(g)
+    assert new.predicted_pace is not None and new.predicted_pace > 0
+    # pinning constrains the DP, so its pace can only be >= the free re-cut
+    assert pinned.schedule.predicted_pace >= \
+        unpinned.schedule.predicted_pace * (1 - 1e-12)
+
+
+def test_pinned_replan_defers_unknown_community_joiner():
+    """A joiner whose bandwidth community the old schedule never recorded
+    (the schedule was cut on a survivor subset) must NOT be placed by the
+    pinned candidate — feeding it state would cross the fence — while a
+    joiner from a recorded community slots into its own community's slice
+    with zero cross-community traffic."""
+    from repro.elastic.replan import _communities_for
+    g, shapes, _, _ = mlp_chain(n_layers=16, d=64, batch=8)
+    prof = g.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    subset = [d for d in range(len(cluster)) if d not in (8, 9, 10, 11)]
+    old = schedule_opfence(g, prof, cluster, device_subset=subset)
+    comms = _communities_for(cluster, old)
+    known = {d for c in comms for d in c}
+    assert 8 not in known                   # its whole machine was excluded
+    rp = replan(g, prof, cluster, old, alive=list(range(len(cluster))),
+                joined=[8], mode="anchored", pin_boundaries=True)
+    assert rp.schedule.assignment[8] == []  # deferred to the next full plan
+    assert cross_cluster_bytes(rp.migration.moves, comms) == 0.0
+    placed = sorted(op for seg in rp.schedule.assignment for op in seg)
+    assert placed == sorted(g.nodes)
+    # a joiner from a *recorded* community slots into that community's
+    # slice: the full schedule's Louvain pass recorded all 24 devices, so an
+    # idle device from a community that owns pipeline stages can join, and
+    # any state it receives stays inside the fence
+    full = schedule_opfence(g, prof, cluster)
+    comms_full = _communities_for(cluster, full)
+    idle = [d for d in range(len(cluster))
+            if d not in set(full.stage_devices())]
+    joiner = next(d for d in idle
+                  if any(set(c) & set(full.stage_devices())
+                         and d in c for c in comms_full))
+    rp2 = replan(g, prof, cluster, full, alive=list(range(len(cluster))),
+                 joined=[joiner], mode="anchored", pin_boundaries=True)
+    assert cross_cluster_bytes(rp2.migration.moves, comms_full) == 0.0
+    placed2 = sorted(op for seg in rp2.schedule.assignment for op in seg)
+    assert placed2 == sorted(g.nodes)
+
+
+def test_pinned_auto_falls_back_to_full_when_no_stage_host_survives():
+    """When every old stage host dies, no pinned candidate exists — auto
+    mode must recover via the full re-plan rather than raise.  The fence is
+    vacuous there: every shard streams from the checkpoint store (src=None),
+    so the fallback cannot move bytes across the WAN."""
+    g, shapes, _, _ = mlp_chain(n_layers=16, d=64, batch=8)
+    prof = g.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    old = schedule_opfence(g, prof, cluster)
+    devs = old.stage_devices()
+    spares = [d for d in range(len(cluster)) if d not in set(devs)]
+    assert spares
+    rp = replan(g, prof, cluster, old, alive=spares, dead=list(devs),
+                mode="auto", pin_boundaries=True)
+    assert rp.mode == "full"
+    assert all(m.src is None for m in rp.migration.moves)
+    placed = sorted(op for seg in rp.schedule.assignment for op in seg)
+    assert placed == sorted(g.nodes)
+
+
+def test_pinned_replan_maps_partial_site_joiner_into_its_community():
+    """A joiner absent from the recorded clusters but whose site overlaps a
+    recorded community (the old cut excluded only part of its machine) is
+    mapped into that community and fed state without crossing the fence."""
+    from repro.elastic.replan import _communities_for, _extend_communities
+    g, shapes, _, _ = mlp_chain(n_layers=24, d=64, batch=8)
+    prof = g.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    subset = [d for d in range(len(cluster)) if d not in (8, 9)]
+    old = schedule_opfence(g, prof, cluster, device_subset=subset)
+    comms = _communities_for(cluster, old)
+    assert 8 not in {d for c in comms for d in c}
+    ext = _extend_communities(cluster, comms, [8])
+    host = next(c for c in ext if 8 in c)
+    assert len(set(host) - {8}) > 0         # mapped into a recorded site
+    rp = replan(g, prof, cluster, old, alive=subset + [8], joined=[8],
+                mode="anchored", pin_boundaries=True)
+    assert rp.schedule.assignment[8]        # the joiner actually hosts ops
+    assert cross_cluster_bytes(rp.migration.moves, ext) == 0.0
+
+
+def test_pinned_controller_failover_stays_intra_cluster():
+    """End to end: a controller with pin_boundaries=True recovers from a
+    failure without any survivor-to-survivor transfer crossing the WAN."""
+    from repro.elastic.replan import _communities_for
+    g, shapes, _, _ = mlp_chain(n_layers=16, d=32, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.paper_testbed(1, seed=0)
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), n_micro=2)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = probe.schedule.stage_devices()[2]
+    comms = _communities_for(cluster, probe.schedule)
+    ctrl = ElasticController(g, prof, cluster,
+                             single_failure_trace(victim, at=2.5 * t1),
+                             n_micro=2, lease_s=t1, replan_mode="anchored",
+                             pin_boundaries=True)
+    res = ctrl.run(steps=10)
+    assert any(e.cause == "failure" for e in res.epochs)
+    assert ctrl.schedule.assignment[victim] == []
+    # reconstruct the failure epoch's moves via a fresh diff: every
+    # survivor-to-survivor transfer stays inside its bandwidth cluster
+    comm_of = {d: ci for ci, c in enumerate(comms) for d in c}
+    rp = replan(g, prof, cluster, probe.schedule,
+                alive=[d for d in range(len(cluster)) if d != victim],
+                dead=[victim], mode="anchored", pin_boundaries=True)
+    for m in rp.migration.moves:
+        if m.src is not None:
+            assert comm_of.get(m.src) == comm_of.get(m.dst)
 
 
 def test_replan_noop_when_nothing_changed():

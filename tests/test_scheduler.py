@@ -6,9 +6,10 @@ import itertools
 import numpy as np
 import pytest
 
-from repro.core import (estimate_iteration, network, partition_min_bottleneck,
+from repro.core import (EdgeCostModel, SCHEDULERS, estimate_iteration,
+                        network, partition_min_bottleneck, plan_adatopk,
                         schedule_equal_compute, schedule_equal_number,
-                        schedule_opfence, simulate_iteration)
+                        schedule_joint, schedule_opfence, simulate_iteration)
 from repro.core.scheduler import louvain_communities, _order_clusters
 from helpers import mlp_chain
 
@@ -109,3 +110,107 @@ def test_cluster_ordering_prefers_strong_links():
     clusters = [[0], [1], [2]]
     order = _order_clusters(clusters, bw)
     assert order[1] == 1  # the well-connected cluster sits in the middle
+
+
+# -------------------------------------------------- Louvain edge cases -----
+def test_louvain_single_node():
+    assert louvain_communities(np.zeros((1, 1))) == [[0]]
+
+
+def test_louvain_fully_disconnected_matrix_yields_singletons():
+    comms = louvain_communities(np.zeros((5, 5)))
+    assert sorted(comms) == [[0], [1], [2], [3], [4]]
+
+
+def test_louvain_deterministic_for_fixed_seed():
+    rng = np.random.default_rng(42)
+    w = rng.random((12, 12))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0.0)
+    a = louvain_communities(w, seed=7)
+    b = louvain_communities(w, seed=7)
+    assert a == b
+    # every node appears exactly once regardless of structure
+    assert sorted(i for c in a for i in c) == list(range(12))
+
+
+# -------------------------------------- SCHEDULERS registry honors kwargs --
+def test_schedulers_registry_honors_device_subset():
+    """Regression: the equal_number/equal_compute registry lambdas swallowed
+    ``device_subset``, so churn baselines silently scheduled onto dead
+    CompNodes."""
+    g, shapes, _, _ = mlp_chain(n_layers=12, d=32, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.geo_random(n=8, n_sites=2, seed=1)
+    subset = [2, 3, 5, 7]
+    for name, sfn in SCHEDULERS.items():
+        sch = sfn(g, prof, cluster, device_subset=subset)
+        used = {d for d, seg in enumerate(sch.assignment) if seg}
+        assert used <= set(subset), (name, used)
+        placed = sorted(op for seg in sch.assignment for op in seg)
+        assert placed == sorted(g.nodes), name
+
+
+def test_schedule_equal_number_rejects_empty_subset():
+    g, shapes, _, _ = mlp_chain(n_layers=6, d=16)
+    cluster = network.homogeneous_lan(n=4)
+    with pytest.raises(ValueError):
+        schedule_equal_number(g, cluster, device_subset=[])
+
+
+# ---------------------------------------------------- joint co-planning ----
+def _geo_workload(n_layers=16, d=128, batch=16, n=8, seed=7):
+    g, shapes, _, _ = mlp_chain(n_layers=n_layers, d=d, batch=batch)
+    prof = g.annotate(shapes)
+    cluster = network.geo_random(n=n, n_sites=3, seed=seed)
+    return g, prof, cluster
+
+
+def test_joint_never_worse_than_sequential_pipeline():
+    """The co-planner evaluates the sequential schedule-then-compress
+    candidate in round 0, so under the shared Eq. 3 pace metric it can only
+    tie or beat it — at any ratio."""
+    g, prof, cluster = _geo_workload()
+    dense = EdgeCostModel(g, prof, cluster)
+    seq_sched = schedule_opfence(g, prof, cluster)
+    for ratio in (10.0, 100.0, 1000.0):
+        seq_plan = plan_adatopk(g, prof, cluster, seq_sched.placement, ratio)
+        seq_pace = dense.with_plan(seq_plan).stage_pace(seq_sched)
+        jp = schedule_joint(g, prof, cluster, ratio=ratio)
+        assert jp.predicted_pace <= seq_pace * (1 + 1e-12), ratio
+        assert jp.schedule.predicted_pace == pytest.approx(jp.predicted_pace)
+        # the returned plan is consistent with the returned schedule
+        placement = jp.schedule.placement
+        for (a, n) in jp.plan.edge_ratio:
+            assert placement[a] != placement[n]
+
+
+def test_joint_recut_strictly_beats_sequential_on_gpt2xl_testbed1():
+    """Acceptance: on the paper's GPT2-XL/testbed-1 workload compression
+    changes the bottleneck-optimal cut, and the fixed point finds it (the
+    blind schedule-then-compress pipeline cannot)."""
+    from repro.configs import resolve
+    from repro.models.opgraph_models import profile_opgraph
+    cfg = resolve("gpt2-xl").full
+    batch, seq = 3, 1024      # paper Table 6
+    g = profile_opgraph(cfg, batch, seq)
+    prof = g.annotate({"tokens": (batch, seq), "labels": (batch, seq)})
+    cluster = network.paper_testbed(1, seed=0)
+    dense = EdgeCostModel(g, prof, cluster)
+    seq_sched = schedule_opfence(g, prof, cluster)
+    improved = False
+    for ratio in (100.0, 300.0, 1000.0):
+        seq_plan = plan_adatopk(g, prof, cluster, seq_sched.placement, ratio)
+        seq_pace = dense.with_plan(seq_plan).stage_pace(seq_sched)
+        jp = schedule_joint(g, prof, cluster, ratio=ratio)
+        assert jp.predicted_pace <= seq_pace * (1 + 1e-12)
+        improved |= jp.predicted_pace < seq_pace * (1 - 1e-6)
+    assert improved
+
+
+def test_joint_registered_in_schedulers():
+    g, prof, cluster = _geo_workload(n_layers=8, d=32, batch=4, n=4)
+    sch = SCHEDULERS["joint"](g, prof, cluster, ratio=100.0)
+    placed = sorted(op for seg in sch.assignment for op in seg)
+    assert placed == sorted(g.nodes)
+    sch.pipeline_subdags(g)    # Table-3 edge sets build cleanly
