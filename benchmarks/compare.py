@@ -1,0 +1,121 @@
+"""CI perf-regression gate over ``benchmarks/run.py --json`` artifacts.
+
+    PYTHONPATH=src python -m benchmarks.compare NEW.json BASELINE.json \
+        [--max-regress 0.10]
+
+Diffs the ``result`` payload of a fresh ``BENCH_<name>.json`` against a
+committed baseline (``benchmarks/baselines/``) and exits non-zero when any
+tracked metric regresses beyond ``--max-regress`` (default 10%):
+
+* ``pace``  — the planner's predicted Eq. 3 steady-state pace, lower is
+              better: new > base · (1 + margin) fails;
+* ``phi``   — simulated throughput (samples/s), higher is better:
+              new < base · (1 − margin) fails.
+
+Both are *deterministic* functions of (workload, topology, seed) — the
+discrete-event simulator measures no wall-clock — so the gate is stable
+across CI runners and the margin only absorbs float/library drift, not
+machine noise.  A scheduler present in the baseline but missing from the new
+run is itself a failure (a silently dropped system is the worst regression);
+new schedulers absent from the baseline pass through (they have no bar yet —
+refresh the baseline to start tracking them).
+
+The comparison logic is a pure function (:func:`compare`) so the gate is
+unit-testable: injecting a 20% pace regression must fail it (tested in
+``tests/test_bench_compare.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Mapping
+
+# metric -> direction: +1 higher-is-better, -1 lower-is-better
+TRACKED = {"pace": -1, "phi": +1}
+
+
+def load_result(path: str) -> Dict:
+    """Read a BENCH json; accepts the harness envelope ({"result": ...}) or
+    a bare result mapping."""
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("result", payload) if isinstance(payload, dict) \
+        else payload
+
+
+def compare(new: Mapping, base: Mapping,
+            max_regress: float = 0.10) -> List[str]:
+    """Violation messages for every tracked metric that regressed beyond
+    ``max_regress`` (empty list = gate passes)."""
+    violations: List[str] = []
+    for system, base_metrics in sorted(base.items()):
+        if not isinstance(base_metrics, Mapping):
+            continue   # scalar annotations (wall time etc.) are not gated
+        new_metrics = new.get(system)
+        if new_metrics is None:
+            violations.append(f"{system}: present in baseline but missing "
+                              f"from the new run")
+            continue
+        for metric, sign in TRACKED.items():
+            if metric not in base_metrics or metric not in new_metrics:
+                continue
+            b = float(base_metrics[metric])
+            n = float(new_metrics[metric])
+            if b <= 0.0:
+                continue
+            if sign < 0 and n > b * (1.0 + max_regress):
+                violations.append(
+                    f"{system}.{metric}: {n:.6g} vs baseline {b:.6g} "
+                    f"(+{(n / b - 1.0) * 100:.1f}%, lower is better)")
+            elif sign > 0 and n < b * (1.0 - max_regress):
+                violations.append(
+                    f"{system}.{metric}: {n:.6g} vs baseline {b:.6g} "
+                    f"(-{(1.0 - n / b) * 100:.1f}%, higher is better)")
+    return violations
+
+
+def format_table(new: Mapping, base: Mapping) -> str:
+    rows = [f"{'system':<16} {'metric':<6} {'baseline':>12} {'new':>12} "
+            f"{'delta':>8}"]
+    for system, base_metrics in sorted(base.items()):
+        if not isinstance(base_metrics, Mapping):
+            continue
+        for metric in TRACKED:
+            if metric not in base_metrics:
+                continue
+            b = float(base_metrics[metric])
+            n = new.get(system, {}).get(metric)
+            if n is None:
+                rows.append(f"{system:<16} {metric:<6} {b:>12.6g} "
+                            f"{'MISSING':>12} {'':>8}")
+                continue
+            n = float(n)
+            delta = (n / b - 1.0) * 100 if b > 0 else float("nan")
+            rows.append(f"{system:<16} {metric:<6} {b:>12.6g} {n:>12.6g} "
+                        f"{delta:>+7.1f}%")
+    return "\n".join(rows)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="freshly produced BENCH_<name>.json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--max-regress", type=float, default=0.10,
+                    help="relative regression budget per metric (0.10 = 10%%)")
+    args = ap.parse_args(argv)
+    new, base = load_result(args.new), load_result(args.baseline)
+    print(format_table(new, base))
+    violations = compare(new, base, args.max_regress)
+    if violations:
+        print("\nPERF GATE FAILED "
+              f"(budget {args.max_regress * 100:.0f}%):", file=sys.stderr)
+        for v in violations:
+            print(f"  - {v}", file=sys.stderr)
+        return 1
+    print(f"\nperf gate OK (budget {args.max_regress * 100:.0f}%)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,6 +37,10 @@ def main() -> None:
     ap.add_argument("--churn-profile", default="gpt2-xl",
                     choices=["gpt2-xl", "tiny"],
                     help="churn bench workload (tiny = CI smoke)")
+    ap.add_argument("--churn-migration-mode", default=None,
+                    choices=["stop", "overlap"],
+                    help="force every elastic churn system onto one "
+                         "migration mode (CI smokes the overlap defaults)")
     ap.add_argument("--joint-profile", default="gpt2-xl",
                     choices=["gpt2-xl", "tiny"],
                     help="joint planning bench workload (tiny = CI smoke)")
@@ -49,8 +53,9 @@ def main() -> None:
                    roofline_table, speedup_table)
 
     benches = {
-        "churn_elastic": lambda: churn.run(csv_writer,
-                                           profile=args.churn_profile),
+        "churn_elastic": lambda: churn.run(
+            csv_writer, profile=args.churn_profile,
+            migration_mode=args.churn_migration_mode),
         "joint_planning": lambda: joint_planning.run(
             csv_writer, profile=args.joint_profile),
         "table1_gpu": lambda: gpu_table.run(csv_writer),

@@ -14,10 +14,20 @@ continues — the printed loss curve is continuous through the fail-over
 dead shard's checkpoint restore blocks, training resumes on the interim
 schedule, and any survivor bulk streams in the background over
 bandwidth-shared links (or is skipped outright when the re-planned pace
-would not pay for the stream).
+would not pay for the stream).  In overlap mode boundary pinning is the
+default: no re-plan moves state across the WAN.
+
+``--planner joint`` (the default) puts the OP-Fence × AdaTopK co-planner in
+charge of every epoch plan — initial schedule, full re-plan candidate, and
+the AdaTopK plan that follows each re-cut — so compression-aware co-planning
+is what actually trains, end to end.  ``--ratio`` sets the AdaTopK target
+(compressed boundary gradients change the numerics: the loss stays
+continuous across the fail-over, but differs from a dense run;
+``--planner opfence`` reproduces the dense behaviour).
 
     PYTHONPATH=src python examples/elastic_training.py [--steps 30]
     PYTHONPATH=src python examples/elastic_training.py --migration-mode overlap
+    PYTHONPATH=src python examples/elastic_training.py --planner opfence
 """
 import argparse
 import sys
@@ -43,6 +53,13 @@ def main() -> int:
     ap.add_argument("--migration-mode", default="stop",
                     choices=["stop", "overlap"],
                     help="stop-the-world vs overlapped recovery")
+    ap.add_argument("--planner", default="joint",
+                    choices=["joint", "opfence"],
+                    help="joint = OP-Fence x AdaTopK co-planner drives every "
+                         "epoch plan (compressed boundaries); opfence = "
+                         "dense scheduling")
+    ap.add_argument("--ratio", type=float, default=8.0,
+                    help="AdaTopK target ratio for --planner joint")
     args = ap.parse_args()
 
     cfg = ModelCfg(name="gpt-elastic-demo", family="dense", n_layers=6,
@@ -68,19 +85,23 @@ def main() -> int:
 
     # probe the churn-free pace to place the failure mid-run
     probe = ElasticController(graph, profiles, cluster, ChurnTrace(()),
-                              n_micro=n_micro)
+                              n_micro=n_micro, planner=args.planner,
+                              joint_ratio=args.ratio)
     t_iter = probe.run(steps=1).steps[0].step_seconds
     victim = probe.schedule.stage_devices()[2]
     trace = single_failure_trace(victim,
                                  at=args.fail_at_step * args.steps * t_iter)
     print(f"churn trace: {trace.to_json()}")
     print(f"victim CompNode {victim} ({cluster.devices[victim].name}), "
-          f"iteration ~{t_iter:.2f}s simulated")
+          f"iteration ~{t_iter:.2f}s simulated, planner={args.planner}"
+          + (f" (AdaTopK ratio {args.ratio:g})"
+             if args.planner == "joint" else ""))
 
     ctrl = ElasticController(graph, profiles, cluster, trace,
                              optimizer=adamw(lr=3e-3), n_micro=n_micro,
                              lease_s=1.5 * t_iter,
-                             migration_mode=args.migration_mode)
+                             migration_mode=args.migration_mode,
+                             planner=args.planner, joint_ratio=args.ratio)
     res = ctrl.run(steps=args.steps, data_fn=data_fn, params=params)
 
     print("\nstep  epoch  loss     sim_clock")

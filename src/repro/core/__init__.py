@@ -21,7 +21,8 @@ from .compression import (CompressionPlan, adaptive_ratios, boundary_compress,
 from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
                   pipeline_loss_and_grad_ef, pipeline_train_step,
                   single_device_loss_and_grad)
-from .executor import (DecentralizedRuntime, MigrationSim, SimResult,
-                       StepTiming, TelemetrySink, pipeline_fill_seconds,
-                       simulate_iteration, simulate_migration)
+from .executor import (DecentralizedRuntime, LinkTiming, MigrationSim,
+                       SimResult, StepTiming, TelemetrySink,
+                       pipeline_fill_seconds, simulate_iteration,
+                       simulate_migration)
 from . import network

@@ -181,7 +181,7 @@ class EdgeCostModel:
 
 def fit_link_corrections(measured: Mapping[Tuple[int, int],
                                            Sequence[Tuple[float, float]]],
-                         cluster: ClusterSpec,
+                         cluster,
                          clamp: Tuple[float, float] = (0.25, 4.0)
                          ) -> Dict[Tuple[int, int], float]:
     """Telemetry-calibrated link corrections.
@@ -192,7 +192,20 @@ def fit_link_corrections(measured: Mapping[Tuple[int, int],
     origin), clamped to ``clamp`` so one pathological sample cannot swing the
     planner by orders of magnitude.  Feed the result to
     :meth:`EdgeCostModel.with_link_corrections`.
+
+    Corrections are **absolute** multipliers on the *uncorrected* α–β spec:
+    re-fits replace what is installed, they never compose with it.  The clamp
+    makes composing actively dangerous — each re-fit of a badly degraded link
+    can contribute up to ``clamp[1]``, so corrections stacked across windows
+    drift geometrically (``4, 16, 64, …``) under perfectly stationary
+    telemetry instead of converging on the true ratio.  To make that mistake
+    unrepresentable, ``cluster`` may be either a bare :class:`ClusterSpec` or
+    an :class:`EdgeCostModel`; a model is reduced to its **base** cluster and
+    any corrections it already carries are ignored, so the fit always
+    measures observed seconds against the pristine spec.
     """
+    if isinstance(cluster, EdgeCostModel):
+        cluster = cluster.cluster   # the uncorrected α–β base, by definition
     lo, hi = clamp
     out: Dict[Tuple[int, int], float] = {}
     for (i, j), samples in measured.items():

@@ -250,6 +250,13 @@ def predict_step_times(graph: OpGraph,
     executor telemetry (:class:`repro.elastic.telemetry.TelemetryLog`), so a
     node is judged by its measured pace, not by re-running the model that
     scheduled it.
+
+    Under closed-loop calibration the controller re-evaluates this with a
+    corrections-bearing ``cost_model`` after every accepted link fit and
+    *re-prices* the detector in place
+    (:meth:`repro.elastic.detector.StragglerDetector.reprice`) — the
+    prediction tracks the links as measured, so a slow-but-known wire stops
+    looking like a slow node.
     """
     out: Dict[int, float] = {}
     for p, (comp, recv) in predict_step_time_components(

@@ -61,14 +61,41 @@ class StepTiming:
         return self.compute_seconds + self.comm_seconds
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkTiming:
+    """One per-link transfer observation: ``nbytes`` rode the directed
+    (src, dst) CompNode link and took ``seconds`` on the wire.
+
+    Emitted by :func:`simulate_iteration` alongside :class:`StepTiming` (one
+    sample per cross-stage edge transfer, per micro-batch, per direction).
+    This is the raw material of closed-loop link calibration: the broker's
+    :class:`repro.elastic.telemetry.TelemetryLog` windows and MAD-filters
+    these into the ``(nbytes, seconds)`` pairs that
+    :func:`repro.core.costmodel.fit_link_corrections` turns into per-link
+    corrections on the planner's α–β model.
+    """
+
+    src: int                   # producer-side CompNode (device) index
+    dst: int                   # consumer-side CompNode (device) index
+    nbytes: float              # exact wire bytes of the transfer
+    seconds: float             # observed transport seconds on the link
+    backward: bool = False
+    step: int = 0
+
+
 class TelemetrySink:
-    """Anything with ``record(StepTiming)``; the trivial list-backed sink."""
+    """Anything with ``record(StepTiming)`` (and optionally
+    ``record_link(LinkTiming)``); the trivial list-backed sink."""
 
     def __init__(self):
         self.samples: List[StepTiming] = []
+        self.link_samples: List[LinkTiming] = []
 
     def record(self, sample: StepTiming) -> None:
         self.samples.append(sample)
+
+    def record_link(self, sample: LinkTiming) -> None:
+        self.link_samples.append(sample)
 
 
 # ===================================================== functional executor ==
@@ -224,7 +251,8 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
     # its own link transfer.  ``charge`` is the stage owning the consumer op,
     # the stage whose telemetry sample absorbs the transfer time (matching
     # the estimator's recv attribution, see StepTiming).
-    edges: List[Tuple[int, int, float, int]] = []  # (from, to, seconds, charge)
+    # (from, to, seconds, charge, bytes)
+    edges: List[Tuple[int, int, float, int, float]] = []
     stage_of = {d: i for i, d in enumerate(stages)}
     total_bytes = 0.0
     for n, node in graph.nodes.items():
@@ -239,7 +267,7 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
                 src, dst = dst, src
             t = model.link_seconds(src, dst, nbytes)
             edges.append((stage_of[src], stage_of[dst], t,
-                          stage_of[placement[n]]))
+                          stage_of[placement[n]], nbytes))
             total_bytes += nbytes
     return stages, comp, edges, total_bytes
 
@@ -259,7 +287,10 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
     ``telemetry`` (anything with ``record(StepTiming)``) receives one sample
     per (stage, micro-batch, direction), stamped with ``step`` — the
     simulated stand-in for real per-CompNode executor timings that the
-    elastic broker's TelemetryLog aggregates for straggler detection.
+    elastic broker's TelemetryLog aggregates for straggler detection.  A
+    sink that additionally exposes ``record_link(LinkTiming)`` also gets one
+    sample per cross-stage edge transfer (micro-batch × direction), the raw
+    per-link observations closed-loop calibration fits corrections from.
 
     ``cost_model`` supplies the wire encoding (its plan, overriding the
     ``plan`` argument) and any telemetry-calibrated link corrections; by
@@ -273,14 +304,16 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
         model = EdgeCostModel(graph, profiles, cluster,
                               plan or plan_none(graph, schedule.placement))
 
+    record_link = getattr(telemetry, "record_link", None)
+
     def run_pass(backward: bool, t0: float, events, device_free, busy):
         stages, comp, edges, nbytes = _stage_tables(
             graph, profiles, schedule, cluster, model, backward)
         k = len(stages)
         order = list(range(k - 1, -1, -1)) if backward else list(range(k))
-        in_edges: Dict[int, List[Tuple[int, float, int]]] = {}
-        for (s, d2, t, charge) in edges:
-            in_edges.setdefault(d2, []).append((s, t, charge))
+        in_edges: Dict[int, List[Tuple[int, float, int, float]]] = {}
+        for (s, d2, t, charge, ebytes) in edges:
+            in_edges.setdefault(d2, []).append((s, t, charge, ebytes))
         link_free: Dict[Tuple[int, int], float] = {}
         done = {}  # (stage, mb) -> finish time
         comm_total = 0.0
@@ -289,7 +322,7 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
             for pos, st in enumerate(order):
                 dev = stages[st]
                 ready = t0
-                for (src, tcomm, charge) in in_edges.get(st, []):
+                for (src, tcomm, charge, ebytes) in in_edges.get(st, []):
                     dep = done.get((src, mb))
                     if dep is None:
                         continue
@@ -299,6 +332,10 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                     comm_total += tcomm
                     comm_charged[(charge, mb)] = \
                         comm_charged.get((charge, mb), 0.0) + tcomm
+                    if record_link is not None:
+                        record_link(LinkTiming(
+                            src=stages[src], dst=stages[st], nbytes=ebytes,
+                            seconds=tcomm, backward=backward, step=step))
                     ready = max(ready, start + tcomm)
                 start = max(ready, device_free.get(dev, t0))
                 end = start + comp[st]
@@ -415,5 +452,5 @@ def pipeline_fill_seconds(graph: OpGraph, profiles: Mapping[str, OpProfile],
     for backward in (False, True):
         _, comp, edges, _ = _stage_tables(graph, profiles, schedule, cluster,
                                           model, backward)
-        total += sum(comp) + sum(t for (_, _, t, _) in edges)
+        total += sum(comp) + sum(t for (_, _, t, _, _) in edges)
     return total

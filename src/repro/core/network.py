@@ -130,6 +130,34 @@ def geo_random(n: int = 16, n_sites: int = 4, seed: int = 0) -> ClusterSpec:
     return ClusterSpec(devices, links)
 
 
+def fat_pipe_sites(n: int = 8, n_sites: int = 2, seed: int = 0,
+                   intra_Bps: float = _bw(1_000), inter_Bps: float = _bw(25),
+                   alpha: float = 2e-5, jitter: float = 0.1) -> ClusterSpec:
+    """Long-fat-network geo topology: β-dominated links (negligible α on
+    every tier), two bandwidth classes, heterogeneous consumer GPUs.
+
+    This is the regime closed-loop link calibration exists for: transport
+    seconds scale with payload, so a link silently congesting below its spec
+    bandwidth shifts every transfer's observed seconds proportionally — a
+    signal :func:`repro.core.costmodel.fit_link_corrections` can fit a clean
+    multiplicative correction from (on α-dominated links a bandwidth drop
+    barely moves small transfers and hides from the fit).
+    """
+    rng = np.random.default_rng(seed)
+    sheets = ["RTX4090", "RTX4080", "RTX3080", "RTX2080"]
+    devices = [make_device(f"f{i}", sheets[i % len(sheets)],
+                           lam=float(rng.uniform(0.5, 0.8)))
+               for i in range(n)]
+    site = [i % n_sites for i in range(n)]
+    links: Dict[Tuple[int, int], LinkSpec] = {}
+    for i in range(n):
+        for j in range(i + 1, n):
+            bw = intra_Bps if site[i] == site[j] else inter_Bps
+            scale = float(np.exp(rng.uniform(-jitter, jitter)))
+            links[(i, j)] = LinkSpec(alpha=alpha, beta=1.0 / (bw * scale))
+    return ClusterSpec(devices, links)
+
+
 # ------------------------------------------------- churn-trace transforms --
 def with_slowdowns(cluster: ClusterSpec,
                    factors: Dict[int, float]) -> ClusterSpec:

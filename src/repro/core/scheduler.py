@@ -287,7 +287,8 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
                    cluster: ClusterSpec, ratio: float = 100.0,
                    encoding: str = "paper", seed: int = 0,
                    device_subset: Optional[Sequence[int]] = None,
-                   max_rounds: int = 4) -> JointPlan:
+                   max_rounds: int = 4,
+                   cost_model: Optional[EdgeCostModel] = None) -> JointPlan:
     """OP-Fence × AdaTopK fixed-point co-planner.
 
     The blind pipeline (schedule on dense bytes, then compress) is
@@ -302,8 +303,15 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
     best (schedule, plan) pair seen, scored by the unified model's Eq. 3
     steady-state pace.  Round 0 *is* the sequential schedule-then-compress
     baseline, so the result is never worse than it under the shared metric.
+
+    ``cost_model`` seeds the iteration's base (dense) model — pass one
+    carrying telemetry-calibrated link corrections so the closed planning
+    loop co-plans against the links as *measured*, not as spec'd.  Its plan
+    (if any) is stripped and it is rebased onto ``cluster``.
     """
-    dense_model = EdgeCostModel(graph, profiles, cluster)
+    dense_model = (cost_model.with_cluster(cluster).with_plan(None)
+                   if cost_model is not None
+                   else EdgeCostModel(graph, profiles, cluster))
     sched = schedule_opfence(graph, profiles, cluster, seed=seed,
                              cost_model=dense_model,
                              device_subset=device_subset)

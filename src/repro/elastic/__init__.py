@@ -1,15 +1,19 @@
-"""Elastic runtime: churn-tolerant membership, straggler detection, and live
-re-scheduling over the FusionLLM stack (beyond-paper; see README §Elastic).
+"""Elastic runtime: churn-tolerant membership, straggler detection, live
+re-scheduling, and closed-loop cost calibration over the FusionLLM stack
+(beyond-paper; see README §Elastic).
 
 Composition: scripted :class:`ChurnTrace` -> lease-based
-:class:`MembershipView` + executor :class:`StepTiming` telemetry aggregated
-by :class:`TelemetryLog` into the EWMA :class:`StragglerDetector`'s
-observations -> :func:`replan` (OP-Fence on the survivors, minimal migration
-plan; :func:`interim_schedule` for the overlapped mode's immediate restart)
--> :mod:`migrate` (bit-exact state movement over the checkpoint wire format)
--> :class:`ElasticController` (drives the runtime across epochs and charges
-the discrete-event clock for detection, blocking migration, and pipeline
-refill — background migration streams while training continues on
+:class:`MembershipView` + executor :class:`StepTiming` / ``LinkTiming``
+telemetry aggregated by :class:`TelemetryLog` into the EWMA
+:class:`StragglerDetector`'s observations and the per-link calibration
+windows -> :func:`replan` (keep / anchored / full candidates — OP-Fence or
+the joint co-planner — minimal migration plan; :func:`interim_schedule` for
+the overlapped mode's immediate restart) -> :mod:`migrate` (bit-exact state
+movement over the checkpoint wire format) -> :class:`ElasticController`
+(drives the runtime across epochs, auto-fits link corrections from the
+telemetry with hysteresis, re-plans when the calibrated pace diverges, and
+charges the discrete-event clock for detection, blocking migration, and
+pipeline refill — background migration streams while training continues on
 bandwidth-shared links).
 """
 from .membership import (ChurnEvent, ChurnTrace, MembershipDelta,

@@ -43,6 +43,31 @@ Two migration modes:
   epoch's schedule (fair-share conservation: bytes crossing the pipeline's
   own bottleneck wire cannot be hidden by overlapping).
 
+Closed planning loop (beyond PR 3's passive cost model): the controller
+periodically re-fits per-link corrections from the telemetry window's
+MAD-filtered per-link transfer observations
+(:meth:`repro.elastic.telemetry.TelemetryLog.link_samples` →
+:func:`repro.core.costmodel.fit_link_corrections`, always against the
+*uncorrected* base spec so re-fits replace rather than compound) and installs
+the calibrated :class:`EdgeCostModel` everywhere the broker prices anything:
+the detector's reference prediction (repriced in place, EWMA history kept),
+the re-planner's candidate costs, the joint co-planner, and the
+stream-vs-keep broker.  Hysteresis (``calibrate_hysteresis``) keeps a single
+noisy window from thrashing; when the calibrated pace of the *active* plan
+drifts more than ``replan_pace_margin`` past the pace it was installed at, a
+``"calibration"`` epoch re-plans on the corrected costs (a re-plan that
+returns the same assignment is a no-op — no migration, no refill).
+
+``planner="joint"`` puts :func:`repro.core.scheduler.schedule_joint` in
+charge of epoch plans end to end — initial schedule, full re-plan candidate,
+and (by default) an AdaTopK plan factory at ``joint_ratio`` — so OP-Fence ×
+AdaTopK co-planning is what actually runs during training.  With this PR
+the planning loop is closed end to end, and ``pin_boundaries`` now defaults
+to True in overlap mode for EVERY planner (a background stream cannot hide
+cross-WAN bytes, so no overlap-mode re-cut should create any — the
+rationale is the stream's, not the joint planner's); pass
+``pin_boundaries=False`` to restore the old unpinned overlap behaviour.
+
 Determinism contract: same graph/cluster/trace/seeds → identical epochs,
 schedules, clocks, and (when training) identical losses.
 """
@@ -52,15 +77,16 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from repro.checkpoint import deserialize_state, serialize_state
-from repro.core.compression import CompressionPlan, plan_none
-from repro.core.costmodel import EdgeCostModel
+from repro.core.compression import CompressionPlan, plan_adatopk, plan_none
+from repro.core.costmodel import EdgeCostModel, fit_link_corrections
 from repro.core.estimator import ClusterSpec, predict_step_times
 from repro.core.executor import (DecentralizedRuntime, TelemetrySink,
                                  pipeline_fill_seconds, simulate_iteration,
                                  simulate_migration)
-from repro.core.network import with_shared_links, with_slowdowns
+from repro.core.network import (with_link_slowdowns, with_shared_links,
+                                with_slowdowns)
 from repro.core.opgraph import OpGraph, OpProfile
-from repro.core.scheduler import Schedule, schedule_opfence
+from repro.core.scheduler import Schedule, schedule_joint, schedule_opfence
 from repro.optim.optimizers import Optimizer
 
 from .detector import StragglerDetector
@@ -91,7 +117,7 @@ class EpochRecord:
     at_step: int               # first data step executed under this epoch
     clock: float               # sim time when the epoch began
     cause: str                 # initial | failure | join | straggler |
-                               # recovery | cutover
+                               # recovery | cutover | calibration
     events: List[ChurnEvent]
     alive: List[int]
     stage_devices: List[int]
@@ -185,17 +211,35 @@ class ElasticController:
                  amortize_steps: float = 100.0,
                  migration_mode: str = "stop",
                  overlap_bandwidth_share: float = 0.75,
-                 pin_boundaries: bool = False,
+                 pin_boundaries: Optional[bool] = None,
+                 planner: str = "opfence",
+                 joint_ratio: float = 100.0,
+                 calibrate_interval: int = 5,
+                 calibrate_min_samples: int = 3,
+                 calibrate_hysteresis: float = 0.2,
+                 replan_pace_margin: float = 0.25,
                  use_kernel: bool = False,
                  initial_alive: Optional[Sequence[int]] = None):
         if migration_mode not in ("stop", "overlap"):
             raise ValueError(f"unknown migration_mode {migration_mode!r}")
+        if planner not in ("opfence", "joint"):
+            raise ValueError(f"unknown planner {planner!r}")
         self.graph = graph
         self.profiles = profiles
         self.base_cluster = cluster
         self.optimizer = optimizer
-        self.plan_factory = plan_factory or (
-            lambda g, prof, cl, placement: plan_none(g, placement))
+        self.planner = planner
+        self.joint_ratio = float(joint_ratio)
+        if plan_factory is not None:
+            self.plan_factory = plan_factory
+        elif planner == "joint":
+            # the joint co-planner's converged plan for a placement is
+            # exactly plan_adatopk at the same ratio under the same base
+            # model, so anchored/interim schedules get co-consistent plans
+            self.plan_factory = self._joint_plan_factory
+        else:
+            self.plan_factory = \
+                lambda g, prof, cl, placement: plan_none(g, placement)
         self.n_micro = int(n_micro)
         self.seed = int(seed)
         self.checkpoint_interval = max(1, int(checkpoint_interval))
@@ -205,7 +249,15 @@ class ElasticController:
         self.amortize_steps = float(amortize_steps)
         self.migration_mode = migration_mode
         self.overlap_bandwidth_share = float(overlap_bandwidth_share)
-        self.pin_boundaries = bool(pin_boundaries)
+        # with the joint planner driving epoch plans end-to-end, overlap mode
+        # defaults to boundary pinning: the background stream cannot hide
+        # cross-WAN traffic, so the re-cut must not create any
+        self.pin_boundaries = (migration_mode == "overlap") \
+            if pin_boundaries is None else bool(pin_boundaries)
+        self.calibrate_interval = max(0, int(calibrate_interval))
+        self.calibrate_min_samples = max(1, int(calibrate_min_samples))
+        self.calibrate_hysteresis = float(calibrate_hysteresis)
+        self.replan_pace_margin = float(replan_pace_margin)
         self.use_kernel = use_kernel
         self._det_cfg = dict(alpha=detector_alpha,
                              threshold=detector_threshold,
@@ -216,6 +268,10 @@ class ElasticController:
         self.membership = MembershipView(len(cluster), trace, lease_s=lease_s,
                                          initial_alive=initial_alive)
         self.believed_factors: Dict[int, float] = {}
+        self.link_corrections: Dict[Tuple[int, int], float] = {}
+        self.calibration_count = 0       # hysteresis-passing fits installed
+        self._steps_since_fit = 0
+        self._installed_pace = 0.0       # believed pace of the active plan
         self.epoch_records: List[EpochRecord] = []
         self.step_records: List[StepRecord] = []
         self.clock = 0.0
@@ -229,13 +285,43 @@ class ElasticController:
     # ----------------------------------------------------------- topology --
     def believed_cluster(self) -> ClusterSpec:
         """What the broker schedules against: base sheets degraded by the
-        detector's confirmed slowdowns."""
+        detector's confirmed slowdowns.  Link-level belief lives in
+        ``link_corrections`` (carried by :meth:`believed_model`), not here —
+        the α–β sheets stay pristine so calibration always fits against the
+        uncorrected spec."""
         return with_slowdowns(self.base_cluster, self.believed_factors)
 
+    def believed_model(self, believed: Optional[ClusterSpec] = None,
+                       plan: Optional[CompressionPlan] = None
+                       ) -> EdgeCostModel:
+        """The broker's full cost belief: believed compute sheets × the
+        epoch's compression plan × telemetry-calibrated link corrections.
+        Every planning-side consumer (detector reference prediction,
+        re-planner, joint co-planner, pace checks) reads this one model."""
+        return EdgeCostModel(self.graph, self.profiles,
+                             believed if believed is not None
+                             else self.believed_cluster(),
+                             plan if plan is not None else self.plan,
+                             self.link_corrections)
+
     def true_cluster(self) -> ClusterSpec:
-        """Ground truth for the simulator: scripted slowdowns in force now."""
-        return with_slowdowns(self.base_cluster,
-                              self.membership.slow_factor)
+        """Ground truth for the simulator: scripted compute and link
+        degradations in force now."""
+        return with_link_slowdowns(
+            with_slowdowns(self.base_cluster, self.membership.slow_factor),
+            self.membership.link_factor)
+
+    def _joint_plan_factory(self, graph: OpGraph,
+                            profiles: Mapping[str, OpProfile],
+                            cluster: ClusterSpec,
+                            placement: Mapping[str, int]) -> CompressionPlan:
+        """Default plan factory under ``planner='joint'``: AdaTopK at the
+        co-planner's ratio, priced by the corrections-bearing model."""
+        return plan_adatopk(graph, profiles, cluster, placement,
+                            self.joint_ratio,
+                            cost_model=EdgeCostModel(
+                                graph, profiles, cluster, None,
+                                self.link_corrections))
 
     # ----------------------------------------------------------- epochs ----
     def _install_schedule(self, cause: str, events: List[ChurnEvent],
@@ -253,9 +339,18 @@ class ElasticController:
         if schedule is not None:
             self.schedule = schedule
         elif migration is None:   # initial epoch: schedule from scratch
-            self.schedule = schedule_opfence(
-                self.graph, self.profiles, believed, seed=self.seed,
-                device_subset=self.membership.alive)
+            if self.planner == "joint":
+                self.schedule = schedule_joint(
+                    self.graph, self.profiles, believed,
+                    ratio=self.joint_ratio, seed=self.seed,
+                    device_subset=self.membership.alive,
+                    cost_model=EdgeCostModel(
+                        self.graph, self.profiles, believed, None,
+                        self.link_corrections)).schedule
+            else:
+                self.schedule = schedule_opfence(
+                    self.graph, self.profiles, believed, seed=self.seed,
+                    device_subset=self.membership.alive)
         placement = self.schedule.placement
         self.plan = self.plan_factory(self.graph, self.profiles, believed,
                                       placement)
@@ -274,16 +369,20 @@ class ElasticController:
                                             self.plan,
                                             use_kernel=self.use_kernel)
         # the detector's reference prediction must share the epoch's
-        # compression plan with the telemetry it is compared against — a
-        # dense reference over-predicts comm on compressed edges and lets a
-        # genuinely slowed node hide below threshold
+        # compression plan AND the calibrated link corrections with the
+        # telemetry it is compared against — a dense or spec-priced reference
+        # over-predicts/under-predicts comm and lets a genuinely slowed node
+        # hide below threshold (or flags a healthy one on a slow-but-known
+        # link)
+        model = self.believed_model(believed)
         self.detector = StragglerDetector(
             predict_step_times(self.graph, self.profiles, believed,
-                               placement,
-                               cost_model=EdgeCostModel(
-                                   self.graph, self.profiles, believed,
-                                   self.plan)),
+                               placement, cost_model=model),
             **self._det_cfg)
+        # the pace this plan was installed at, under the broker's current
+        # belief — the reference the calibration re-plan trigger diverges from
+        self._installed_pace = model.stage_pace(self.schedule)
+        self._steps_since_fit = 0
         self.epoch_records.append(EpochRecord(
             epoch=len(self.epoch_records), at_step=at_step, clock=self.clock,
             cause=cause, events=list(events),
@@ -336,6 +435,7 @@ class ElasticController:
                 overlapping=self._migrating is not None))
             # a degraded node shows up as aggregated telemetry > prediction
             self.detector.observe(self.telemetry.node_step_times())
+            self._steps_since_fit += 1
             if step % self.checkpoint_interval == 0:
                 ckpts.append(_Checkpoint(
                     step=step, clock=self.clock,
@@ -405,6 +505,21 @@ class ElasticController:
 
             joined = [d.event.node for d in deltas if d.event.kind == "join"]
             rp = self._replan(dead, joined)
+            plan_only = False
+            if cause == "calibration":
+                same_assign = \
+                    rp.schedule.assignment == self.schedule.assignment
+                new_plan = self.plan_factory(self.graph, self.profiles,
+                                             self.believed_cluster(),
+                                             rp.schedule.placement)
+                if same_assign and new_plan == self.plan:
+                    # calibration confirmed the active plan (schedule AND
+                    # compression) is still the best response — no epoch
+                    # change, no migration, no refill
+                    continue
+                # same cut, re-allocated compression: a hot plan swap moves
+                # no state and never stalls the pipeline
+                plan_only = same_assign
             if self.migration_mode == "overlap":
                 self._begin_overlap(rp, cause=cause,
                                     events=[d.event for d in deltas],
@@ -426,7 +541,8 @@ class ElasticController:
                                        migration=rp.migration,
                                        rollback_steps=rollback_steps,
                                        replan_mode=rp.mode,
-                                       schedule=rp.schedule)
+                                       schedule=rp.schedule,
+                                       charge_refill=not plan_only)
         return ElasticRunResult(steps=self.step_records,
                                 epochs=self.epoch_records,
                                 params=params, opt_state=opt_state,
@@ -510,9 +626,11 @@ class ElasticController:
         def pace(schedule: Schedule, cluster: ClusterSpec) -> float:
             plan = self.plan_factory(self.graph, self.profiles, believed,
                                      schedule.placement)
-            return simulate_iteration(self.graph, self.profiles, schedule,
-                                      cluster, plan,
-                                      n_micro=self.n_micro).iteration_time
+            return simulate_iteration(
+                self.graph, self.profiles, schedule, cluster,
+                n_micro=self.n_micro,
+                cost_model=self.believed_model(cluster, plan)
+            ).iteration_time
 
         t_interim = pace(interim, believed)
         t_target = pace(target, believed)
@@ -561,7 +679,8 @@ class ElasticController:
         slowdowns, background-busy set), which only change at churn events
         or re-plans — cached so the per-step hot loop skips the sweeps."""
         busy = self._migrating.busy if self._migrating is not None else ()
-        key = (tuple(sorted(self.membership.slow_factor.items())), busy)
+        key = (tuple(sorted(self.membership.slow_factor.items())),
+               tuple(sorted(self.membership.link_factor.items())), busy)
         if self._obs_cache is None or self._obs_cache[0] != key:
             true_cl = self.true_cluster()
             if busy:
@@ -571,9 +690,15 @@ class ElasticController:
             sim = simulate_iteration(self.graph, self.profiles, self.schedule,
                                      true_cl, self.plan,
                                      n_micro=self.n_micro, telemetry=sink)
-            self._obs_cache = (key, sim.iteration_time, sink.samples)
-        _, sim_time, samples = self._obs_cache
+            self._obs_cache = (key, sim.iteration_time, sink.samples,
+                               sink.link_samples)
+        _, sim_time, samples, link_samples = self._obs_cache
         self.telemetry.record_step(samples, step=step)
+        if self._migrating is None:
+            # link observations taken while a background stream contends on
+            # the wire measure the (transient) shared bandwidth, not the
+            # link's truth — calibrating on them would thrash
+            self.telemetry.record_link_step(link_samples, step=step)
         return sim_time
 
     # ------------------------------------------------------- transitions ---
@@ -605,7 +730,74 @@ class ElasticController:
             for d in recovered:
                 del self.believed_factors[d]
             return "recovery", []
+        if self._calibration_due():
+            return "calibration", []
         return None
+
+    # ------------------------------------------------------- calibration ---
+    def _calibration_due(self) -> bool:
+        """Run the periodic auto-calibration when its window has elapsed;
+        True when the newly calibrated belief diverges from the active plan
+        far enough that a re-plan is warranted."""
+        if not self.calibrate_interval:
+            return False
+        if self._steps_since_fit < self.calibrate_interval:
+            return False
+        self._steps_since_fit = 0
+        return self._calibrate()
+
+    def _calibrate(self) -> bool:
+        """Fit per-link corrections from the telemetry window and fold the
+        survivors into the broker's belief.
+
+        The fit always runs against the *uncorrected* base spec
+        (``base_cluster``) — corrections are absolute and replace what is
+        installed, so repeated re-fits converge on the measured ratio instead
+        of compounding through the clamp (see
+        :func:`repro.core.costmodel.fit_link_corrections`).  Hysteresis: a
+        fitted value within ``calibrate_hysteresis`` (relative) of the
+        installed one is noise, not drift — ignored, so a single noisy
+        window cannot thrash the schedule.  Values that return to within the
+        band of 1.0 drop their correction outright (the link healed).
+
+        On any accepted change the detector is *repriced* in place (same
+        schedule, new reference — EWMA history survives) and the active
+        plan's calibrated pace is compared against the pace it was installed
+        at: divergence beyond ``replan_pace_margin`` returns True, which the
+        transition poll turns into a ``"calibration"`` epoch change.
+        """
+        samples = self.telemetry.link_samples(
+            min_steps=self.calibrate_min_samples)
+        if not samples:
+            return False
+        fitted = fit_link_corrections(samples, self.base_cluster)
+        changed = False
+        for lk in sorted(fitted):
+            new = fitted[lk]
+            old = self.link_corrections.get(lk, 1.0)
+            if abs(new - old) <= self.calibrate_hysteresis * old:
+                continue
+            if abs(new - 1.0) <= self.calibrate_hysteresis:
+                self.link_corrections.pop(lk, None)
+            else:
+                self.link_corrections[lk] = new
+            changed = True
+        if not changed:
+            return False
+        self.calibration_count += 1
+        believed = self.believed_cluster()
+        model = self.believed_model(believed)
+        self.detector.reprice(
+            predict_step_times(self.graph, self.profiles, believed,
+                               self.schedule.placement, cost_model=model))
+        pace = model.stage_pace(self.schedule)
+        diverged = self._installed_pace > 0.0 and \
+            pace > (1.0 + self.replan_pace_margin) * self._installed_pace
+        # re-arm on the freshly calibrated pace either way: the next trigger
+        # needs *further* divergence, not the same one re-observed every
+        # window (and a re-plan that keeps the schedule must not loop)
+        self._installed_pace = pace
+        return diverged
 
     def _rehabilitated(self) -> List[int]:
         """Believed-degraded nodes whose observations say they are healthy
@@ -626,15 +818,17 @@ class ElasticController:
         for d in dead:
             self.believed_factors.pop(d, None)
         believed = self.believed_cluster()
-        # re-plan under the epoch's compression plan: boundaries that persist
-        # across the re-cut keep their compressed byte costs (edges the old
-        # plan never keyed fall back to dense — the next epoch's plan_factory
-        # re-compresses them)
-        model = EdgeCostModel(self.graph, self.profiles, believed, self.plan)
+        # re-plan under the epoch's compression plan AND the calibrated link
+        # corrections: boundaries that persist across the re-cut keep their
+        # compressed byte costs (edges the old plan never keyed fall back to
+        # dense — the next epoch's plan_factory re-compresses them), and
+        # every candidate is priced on the links as measured, not as spec'd
+        model = self.believed_model(believed)
         return replan(self.graph, self.profiles, believed,
                       self.schedule, alive=self.membership.alive, dead=dead,
                       joined=joined, seed=self.seed,
                       opt_state_mult=self.opt_state_mult,
                       cost_model=model, mode=self.replan_mode,
                       amortize_steps=self.amortize_steps,
-                      pin_boundaries=self.pin_boundaries)
+                      pin_boundaries=self.pin_boundaries,
+                      planner=self.planner, joint_ratio=self.joint_ratio)

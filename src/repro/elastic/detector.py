@@ -72,6 +72,20 @@ class StragglerDetector:
         self.stats = {int(d): StageStats(predicted=float(t))
                       for d, t in predicted.items()}
 
+    def reprice(self, predicted: Mapping[int, float]) -> None:
+        """Install recalibrated reference predictions *without* dropping the
+        EWMA observation history.  Used by closed-loop link calibration: the
+        schedule (hence the observation stream) did not change, only the
+        broker's cost model for it — a ``reset`` here would grant a genuine
+        straggler a fresh ``min_observations`` warm-up every calibration
+        window and let it hide indefinitely."""
+        for d, t in predicted.items():
+            st = self.stats.get(int(d))
+            if st is None:
+                self.stats[int(d)] = StageStats(predicted=float(t))
+            else:
+                st.predicted = float(t)
+
     def observe(self, stage_times: Mapping[int, float]) -> None:
         for d, t in stage_times.items():
             st = self.stats.get(int(d))

@@ -24,15 +24,17 @@ import dataclasses
 import json
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-EVENT_KINDS = ("join", "leave", "slowdown", "recover")
+EVENT_KINDS = ("join", "leave", "slowdown", "slowlink", "recover")
 
 
 @dataclasses.dataclass(frozen=True)
 class ChurnEvent:
     """One scripted membership event.
 
-    ``factor`` only matters for ``slowdown``: the multiplier on the node's
-    effective compute speed (0 < factor < 1).  ``recover`` clears it.
+    ``factor`` only matters for ``slowdown`` (multiplier on the node's
+    effective compute speed) and ``slowlink`` (multiplier on the bandwidth of
+    every link touching the node — its uplink silently congests below spec),
+    both in (0, 1).  ``recover`` clears both.
     """
 
     time: float
@@ -43,12 +45,13 @@ class ChurnEvent:
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown churn event kind {self.kind!r}")
-        if self.kind == "slowdown" and not (0.0 < self.factor <= 1.0):
-            raise ValueError("slowdown factor must be in (0, 1]")
+        if self.kind in ("slowdown", "slowlink") \
+                and not (0.0 < self.factor <= 1.0):
+            raise ValueError(f"{self.kind} factor must be in (0, 1]")
 
     def to_dict(self) -> Dict:
         d = {"t": self.time, "kind": self.kind, "node": self.node}
-        if self.kind == "slowdown":
+        if self.kind in ("slowdown", "slowlink"):
             d["factor"] = self.factor
         return d
 
@@ -111,10 +114,13 @@ class MembershipView:
     leave), ``epoch`` increments once per poll (all changes detected together
     fold into one re-plan).
 
-    ``slowdown`` / ``recover`` events do NOT bump the epoch: they record the
-    *ground-truth* speed factors (``slow_factor``) the simulator degrades the
+    ``slowdown`` / ``slowlink`` / ``recover`` events do NOT bump the epoch:
+    they record the *ground-truth* factors (``slow_factor`` for compute,
+    ``link_factor`` for a node's link bandwidths) the simulator degrades the
     real cluster by.  The broker is not told — its straggler detector has to
-    notice from observed step times (that is the point of the exercise).
+    notice compute drift from observed step times, and its link calibration
+    has to notice bandwidth drift from observed transfers (that is the point
+    of the exercise).
     """
 
     def __init__(self, n_nodes: int, trace: ChurnTrace,
@@ -128,6 +134,7 @@ class MembershipView:
         self.alive: List[int] = sorted(initial_alive) \
             if initial_alive is not None else list(range(n_nodes))
         self.slow_factor: Dict[int, float] = {}
+        self.link_factor: Dict[int, float] = {}
         self.epoch = 0
         self.now = 0.0
         self._cursor = 0               # next undelivered trace event
@@ -166,6 +173,7 @@ class MembershipView:
             if e.node in self.alive:
                 self.alive.remove(e.node)
                 self.slow_factor.pop(e.node, None)
+                self.link_factor.pop(e.node, None)
                 return True
         elif e.kind == "join":
             if e.node not in self.alive:
@@ -175,8 +183,12 @@ class MembershipView:
         elif e.kind == "slowdown":
             # ground truth only — the broker discovers this via the detector
             self.slow_factor[e.node] = e.factor
+        elif e.kind == "slowlink":
+            # ground truth only — link calibration has to measure it
+            self.link_factor[e.node] = e.factor
         elif e.kind == "recover":
             self.slow_factor.pop(e.node, None)
+            self.link_factor.pop(e.node, None)
         return False
 
     # ------------------------------------------------------------ snapshot
@@ -184,4 +196,5 @@ class MembershipView:
         """Deterministic state fingerprint (the determinism tests hash it)."""
         return {"epoch": self.epoch, "now": self.now,
                 "alive": list(self.alive),
-                "slow": sorted(self.slow_factor.items())}
+                "slow": sorted(self.slow_factor.items()),
+                "slowlink": sorted(self.link_factor.items())}

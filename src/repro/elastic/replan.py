@@ -35,7 +35,8 @@ from repro.core.opgraph import chain as op_chain
 from repro.core.partition import (attach_sources, min_bottleneck_chain,
                                   partition_min_bottleneck)
 from repro.core.scheduler import (Schedule, _to_full_assignment,
-                                  louvain_communities, schedule_opfence)
+                                  louvain_communities, schedule_joint,
+                                  schedule_opfence)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +79,7 @@ class ReplanResult:
     migration: MigrationPlan
     alive: List[int]
     dead: List[int]
-    mode: str = "full"           # which candidate won: full | anchored
+    mode: str = "full"           # which candidate won: full | anchored | keep
 
 
 def state_bytes(profile: OpProfile, opt_state_mult: float = 2.0,
@@ -347,7 +348,8 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
            checkpoint_link: LinkSpec = CHECKPOINT_LINK,
            cost_model: Optional[EdgeCostModel] = None,
            mode: str = "auto", amortize_steps: float = 100.0,
-           pin_boundaries: bool = False
+           pin_boundaries: bool = False,
+           planner: str = "opfence", joint_ratio: float = 100.0
            ) -> ReplanResult:
     """Incremental re-scheduling with a migration-aware candidate choice.
 
@@ -374,13 +376,44 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
     ``full`` candidate** — a from-scratch OP-Fence pass moves state across
     the WAN freely, which would silently void the zero-cross-WAN guarantee
     the flag exists for (``mode='full'`` is therefore rejected).
+
+    ``planner="joint"`` makes :func:`repro.core.scheduler.schedule_joint`
+    the ``full`` candidate generator — the OP-Fence × AdaTopK co-planner (at
+    ``joint_ratio``) is then what actually produces epoch plans during
+    training, not just a registry entry.  The anchored/pinned candidates
+    already re-cut under ``cost_model``'s plan-bearing compressed costs, so
+    the migration-aware choice compares like against like.
+
+    When the old schedule is still feasible (no stage host dead or evicted),
+    auto mode also offers it as the zero-migration ``keep`` candidate,
+    re-scored under ``cost_model``.  Without it, a belief-change re-plan
+    (straggler, calibration) is forced to move state even when every
+    candidate's pace gain drowns in its migration bill — at GPT2-XL state
+    sizes over WAN links the rational response to a degraded link is often
+    "same cut, re-allocated compression", which costs zero bytes.
     """
     if mode not in ("auto", "full", "anchored"):
         raise ValueError(f"unknown replan mode {mode!r}")
+    if planner not in ("opfence", "joint"):
+        raise ValueError(f"unknown replan planner {planner!r}")
     if pin_boundaries and mode == "full":
         raise ValueError("pin_boundaries is incompatible with mode='full' — "
                          "the full re-plan cannot honor the pinned WAN cuts")
     candidates: Dict[str, Schedule] = {}
+    alive_set = set(int(a) for a in alive)
+    dead_set = set(int(d) for d in dead)
+    old_devs = old_schedule.stage_devices()
+    if mode == "auto" and old_devs and \
+            all(d in alive_set and d not in dead_set for d in old_devs):
+        # re-score against the CURRENT belief — the pace recorded at
+        # original planning time predates whatever belief change (straggler,
+        # calibration) triggered this re-plan, and a stale optimistic pace
+        # plus a zero migration bill would let "keep" win the comparison the
+        # re-plan exists to escape
+        score_model = cost_model if cost_model is not None \
+            else EdgeCostModel(graph, profiles, cluster)
+        candidates["keep"] = dataclasses.replace(
+            old_schedule, predicted_pace=score_model.stage_pace(old_schedule))
     if mode in ("auto", "anchored"):
         anchor_fn = _pinned_anchored_schedule if pin_boundaries \
             else _anchored_schedule
@@ -394,9 +427,14 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
     # (src=None) and a fresh OP-Fence pass cannot move bytes across the WAN
     if mode in ("auto", "full") and \
             (not pin_boundaries or (mode == "auto" and not candidates)):
-        candidates["full"] = schedule_opfence(
-            graph, profiles, cluster, seed=seed,
-            cost_model=cost_model, device_subset=alive)
+        if planner == "joint":
+            candidates["full"] = schedule_joint(
+                graph, profiles, cluster, ratio=joint_ratio, seed=seed,
+                device_subset=alive, cost_model=cost_model).schedule
+        else:
+            candidates["full"] = schedule_opfence(
+                graph, profiles, cluster, seed=seed,
+                cost_model=cost_model, device_subset=alive)
     if not candidates:
         raise RuntimeError("no feasible re-plan candidate")
 

@@ -23,6 +23,16 @@ A single spiked step therefore cannot flag a healthy node (tested), while a
 genuine slowdown shifts the whole window and surfaces within ``window``
 steps.  ``predict_step_times`` remains the detector's reference *prediction*
 only — the observation path is telemetry, end to end.
+
+Beyond node step times, the log also aggregates **per-link** transfer
+observations (:class:`repro.core.executor.LinkTiming`): per step, each
+directed CompNode pair's transfers fold into one ``(bytes, seconds)`` total,
+and :meth:`TelemetryLog.link_samples` reports the MAD-filtered window of
+those totals — the exact input
+:func:`repro.core.costmodel.fit_link_corrections` needs to calibrate the
+planner's α–β model against the wire the traffic actually rode.  That is the
+observation half of the closed planning loop; the controller owns the fit,
+hysteresis, and re-plan trigger.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.executor import StepTiming
+from repro.core.executor import LinkTiming, StepTiming
 
 
 def _robust_window_stat(values: Sequence[float], mad_k: float) -> float:
@@ -61,6 +71,21 @@ class _NodeSeries:
     seconds: List[float] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class _LinkSeries:
+    """Per-directed-link history: per observed step, the total wire bytes the
+    link carried, the total transport seconds they took, and the number of
+    transfers folded in.  The count matters: K transfers pay K α's, so the
+    calibration pair reported per step is the *mean* transfer ``(B/K, S/K)``
+    — exact under the affine α–β model (``Σ(α+β·bₖ)/K = α + β·(Σbₖ/K)``),
+    whereas the raw total would inflate every healthy link by (K−1)·α."""
+
+    steps: List[int] = dataclasses.field(default_factory=list)
+    nbytes: List[float] = dataclasses.field(default_factory=list)
+    seconds: List[float] = dataclasses.field(default_factory=list)
+    counts: List[int] = dataclasses.field(default_factory=list)
+
+
 class TelemetryLog:
     """Sliding-window aggregator from raw StepTiming samples to the
     per-CompNode step times the straggler detector observes.
@@ -82,7 +107,9 @@ class TelemetryLog:
         # (node, step) -> [total seconds, set of micro-batch indices]
         self._acc: Dict[Tuple[int, int], List] = {}
         self._series: Dict[int, _NodeSeries] = {}
+        self._links: Dict[Tuple[int, int], _LinkSeries] = {}
         self.n_samples = 0
+        self.n_link_samples = 0
 
     # ------------------------------------------------------------ recording
     def record(self, sample: StepTiming) -> None:
@@ -98,6 +125,33 @@ class TelemetryLog:
     def record_step(self, samples: Iterable[StepTiming], step: int) -> None:
         for s in samples:
             self.record(dataclasses.replace(s, step=step))
+
+    def record_link(self, sample: LinkTiming) -> None:
+        """Fold one per-transfer link observation into the (src, dst) link's
+        per-step (bytes, seconds) totals."""
+        key = (int(sample.src), int(sample.dst))
+        step = int(sample.step)
+        series = self._links.setdefault(key, _LinkSeries())
+        if series.steps and series.steps[-1] == step:
+            series.nbytes[-1] += float(sample.nbytes)
+            series.seconds[-1] += float(sample.seconds)
+            series.counts[-1] += 1
+        else:
+            series.steps.append(step)
+            series.nbytes.append(float(sample.nbytes))
+            series.seconds.append(float(sample.seconds))
+            series.counts.append(1)
+            if len(series.steps) > self.history_steps:
+                del series.steps[:-self.history_steps]
+                del series.nbytes[:-self.history_steps]
+                del series.seconds[:-self.history_steps]
+                del series.counts[:-self.history_steps]
+        self.n_link_samples += 1
+
+    def record_link_step(self, samples: Iterable[LinkTiming],
+                         step: int) -> None:
+        for s in samples:
+            self.record_link(dataclasses.replace(s, step=step))
 
     def _fold(self, key: Tuple[int, int], slot: List) -> None:
         """Fold the (node, step) accumulator into the node's series: total
@@ -136,13 +190,49 @@ class TelemetryLog:
                                             self.mad_k)
         return out
 
+    def link_samples(self, min_steps: int = 3
+                     ) -> Dict[Tuple[int, int], List[Tuple[float, float]]]:
+        """MAD-filtered ``(nbytes, seconds)`` transfer samples per directed
+        link over the aggregation window — the calibration input of
+        :func:`repro.core.costmodel.fit_link_corrections`.
+
+        Outlier rejection mirrors :func:`_robust_window_stat`, applied to the
+        per-byte pace (seconds per byte) so windows mixing payload sizes are
+        judged on the link's rate, not on payload-driven duration swings.
+        Links with fewer than ``min_steps`` window entries are withheld: a
+        correction fitted from one or two steps is exactly the noisy single
+        window hysteresis exists to reject.
+        """
+        out: Dict[Tuple[int, int], List[Tuple[float, float]]] = {}
+        for key, series in self._links.items():
+            nb = series.nbytes[-self.window:]
+            sec = series.seconds[-self.window:]
+            cnt = series.counts[-self.window:]
+            if len(nb) < max(1, int(min_steps)):
+                continue
+            pairs = [(b / k, s / k) for b, s, k in zip(nb, sec, cnt)]
+            if len(pairs) >= 3:
+                pace = np.array([s / max(b, 1.0) for b, s in pairs])
+                med = float(np.median(pace))
+                mad = float(np.median(np.abs(pace - med)))
+                keep = np.abs(pace - med) <= self.mad_k * mad
+                if np.any(keep):
+                    pairs = [p for p, k in zip(pairs, keep) if k]
+            out[key] = pairs
+        return out
+
     def latest_step(self) -> Optional[int]:
         steps = [s.steps[-1] for s in self._series.values() if s.steps]
         return max(steps) if steps else None
 
     def clear(self) -> None:
         """Drop all history — called at every re-plan: a new schedule changes
-        every stage's expected time, so old samples must not carry over."""
+        every stage's expected time, so old samples must not carry over.
+        Link samples are dropped too (the new schedule routes different
+        payloads over different wires); installed corrections live on the
+        controller and survive."""
         self._acc.clear()
         self._series.clear()
+        self._links.clear()
         self.n_samples = 0
+        self.n_link_samples = 0

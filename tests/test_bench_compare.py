@@ -1,0 +1,100 @@
+"""CI perf-regression gate (benchmarks/compare.py): the pure comparison
+logic, the committed baseline's schema, and the CLI exit codes — including
+the acceptance requirement that an injected 20% pace regression fails the
+gate."""
+import copy
+import json
+import os
+
+import pytest
+
+from benchmarks.compare import compare, load_result, main
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "BENCH_baseline_joint.json")
+
+
+def _base():
+    return {
+        "opfence": {"pace": 0.030, "phi": 16.0, "iter_s": 0.1},
+        "joint": {"pace": 0.025, "phi": 18.0, "iter_s": 0.09},
+    }
+
+
+def test_identical_results_pass():
+    assert compare(_base(), _base()) == []
+
+
+def test_injected_pace_regression_fails():
+    """Acceptance: the gate demonstrably fails on a 20% pace regression."""
+    new = copy.deepcopy(_base())
+    new["joint"]["pace"] *= 1.20
+    violations = compare(new, _base(), max_regress=0.10)
+    assert len(violations) == 1
+    assert "joint.pace" in violations[0]
+
+
+def test_injected_throughput_regression_fails():
+    new = copy.deepcopy(_base())
+    new["opfence"]["phi"] *= 0.80
+    violations = compare(new, _base(), max_regress=0.10)
+    assert len(violations) == 1 and "opfence.phi" in violations[0]
+
+
+def test_regressions_inside_budget_pass():
+    new = copy.deepcopy(_base())
+    new["joint"]["pace"] *= 1.09
+    new["opfence"]["phi"] *= 0.91
+    assert compare(new, _base(), max_regress=0.10) == []
+
+
+def test_improvements_never_fail():
+    new = copy.deepcopy(_base())
+    new["joint"]["pace"] *= 0.5
+    new["opfence"]["phi"] *= 2.0
+    assert compare(new, _base()) == []
+
+
+def test_missing_system_fails_and_new_system_passes():
+    new = copy.deepcopy(_base())
+    del new["opfence"]
+    new["experimental"] = {"pace": 99.0, "phi": 0.001}   # no bar yet
+    violations = compare(new, _base())
+    assert len(violations) == 1 and "opfence" in violations[0]
+
+
+def test_untracked_metrics_ignored():
+    base, new = _base(), copy.deepcopy(_base())
+    new["joint"]["iter_s"] *= 100          # iter_s is informational only
+    base["wall_seconds"] = 12.0            # scalar annotation: not a system
+    new["wall_seconds"] = 9000.0
+    assert compare(new, base) == []
+
+
+def test_committed_baseline_gates_itself():
+    """Schema drift guard: the committed baseline must contain tracked
+    metrics and pass the gate against itself."""
+    base = load_result(BASELINE)
+    assert any(isinstance(v, dict) and "pace" in v and "phi" in v
+               for v in base.values()), base
+    assert compare(base, base) == []
+
+
+def test_cli_exit_codes(tmp_path):
+    base_p = tmp_path / "base.json"
+    base_p.write_text(json.dumps({"result": _base()}))
+    ok_p = tmp_path / "ok.json"
+    ok_p.write_text(json.dumps({"result": _base()}))
+    assert main([str(ok_p), str(base_p)]) == 0
+    bad = copy.deepcopy(_base())
+    bad["joint"]["pace"] *= 1.20           # the injected regression
+    bad_p = tmp_path / "bad.json"
+    bad_p.write_text(json.dumps({"result": bad}))
+    assert main([str(bad_p), str(base_p)]) == 1
+    # a tighter budget flips the verdict on a small regression
+    small = copy.deepcopy(_base())
+    small["joint"]["pace"] *= 1.06
+    small_p = tmp_path / "small.json"
+    small_p.write_text(json.dumps({"result": small}))
+    assert main([str(small_p), str(base_p)]) == 0
+    assert main([str(small_p), str(base_p), "--max-regress", "0.05"]) == 1
