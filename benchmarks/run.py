@@ -1,20 +1,35 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--steps N] [--json]
+    PYTHONPATH=src python -m benchmarks.run [BENCH] [--steps N] [--json]
+    PYTHONPATH=src python benchmarks/run.py churn --churn-profile tiny --trace
 
-Prints ``name,us_per_call,derived`` CSV lines.  ``--json`` additionally
-writes one ``BENCH_<name>.json`` perf artifact per bench from whatever the
-bench's ``run()`` returned (throughput + predicted pace per scheduler for
-``joint_planning``) — CI uploads these so the perf trajectory is tracked
-per commit instead of scrolling away in logs.
+Prints ``name,us_per_call,derived`` CSV lines.  ``BENCH`` selects benches by
+name prefix (``churn`` runs ``churn_elastic``; ``--only`` remains the exact
+form).  ``--json`` additionally writes one ``BENCH_<name>.json`` perf
+artifact per bench from whatever the bench's ``run()`` returned (throughput
++ predicted pace per scheduler for ``joint_planning``) — CI uploads these so
+the perf trajectory is tracked per commit instead of scrolling away in logs.
+
+``--trace`` attaches the observability layer to the benches that support it
+(currently the churn bench, including its closed-loop calibration demo):
+each instrumented run writes ``TRACE_<name>.json`` (open in Perfetto),
+``TRACE_<name>.jsonl`` and ``FLIGHT_<name>.jsonl`` artifacts and prints the
+run report — per-stage timeline, comm/compute overlap fraction, straggler
+heatmap, and the broker's decision log.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 import traceback
+
+if __package__ in (None, ""):           # `python benchmarks/run.py ...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    __package__ = "benchmarks"          # noqa: A001 — relative imports below
 
 
 def csv_writer(name: str, us_per_call: float, derived: str = "") -> None:
@@ -31,7 +46,11 @@ def write_json_artifact(name: str, result, wall_s: float) -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("bench", nargs="?", default=None,
+                    help="run only benches whose name starts with this "
+                         "prefix (e.g. 'churn', 'joint')")
+    ap.add_argument("--only", default=None,
+                    help="run exactly this bench (exact-name form of BENCH)")
     ap.add_argument("--steps", type=int, default=80,
                     help="convergence steps (Fig. 8)")
     ap.add_argument("--churn-profile", default="gpt2-xl",
@@ -42,8 +61,14 @@ def main() -> None:
                     help="force every elastic churn system onto one "
                          "migration mode (CI smokes the overlap defaults)")
     ap.add_argument("--joint-profile", default="gpt2-xl",
-                    choices=["gpt2-xl", "tiny"],
-                    help="joint planning bench workload (tiny = CI smoke)")
+                    choices=["gpt2-xl", "tiny", "hetero"],
+                    help="joint planning bench workload (tiny = CI smoke, "
+                         "hetero = the mixed-width chain the perf baseline "
+                         "is pinned on)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record span traces + the broker flight recorder "
+                         "on supporting benches; writes TRACE_*/FLIGHT_* "
+                         "artifacts and prints the run report")
     ap.add_argument("--json", action="store_true",
                     help="write a BENCH_<name>.json artifact per bench")
     args = ap.parse_args()
@@ -55,7 +80,7 @@ def main() -> None:
     benches = {
         "churn_elastic": lambda: churn.run(
             csv_writer, profile=args.churn_profile,
-            migration_mode=args.churn_migration_mode),
+            migration_mode=args.churn_migration_mode, trace=args.trace),
         "joint_planning": lambda: joint_planning.run(
             csv_writer, profile=args.joint_profile),
         "table1_gpu": lambda: gpu_table.run(csv_writer),
@@ -68,9 +93,15 @@ def main() -> None:
         "ablation_nmicro": lambda: ablation_microbatch.run(csv_writer),
         "roofline": lambda: roofline_table.run(csv_writer),
     }
+    if args.bench and not any(n.startswith(args.bench) for n in benches):
+        print(f"# no bench matches prefix {args.bench!r}; "
+              f"available: {sorted(benches)}", file=sys.stderr)
+        raise SystemExit(2)
     failed = []
     for name, fn in benches.items():
         if args.only and args.only != name:
+            continue
+        if args.bench and not name.startswith(args.bench):
             continue
         t0 = time.time()
         try:

@@ -31,6 +31,7 @@ from .opgraph import OpData, OpGraph, OpProfile, OpType
 from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
                   pipeline_loss_and_grad_ef)
 from .scheduler import Schedule
+from ..obs.trace import CAT_BWD, CAT_FWD, CAT_TRANSFER
 
 
 # ========================================================== telemetry hook ==
@@ -145,7 +146,8 @@ class DecentralizedRuntime:
     def __init__(self, graph: OpGraph, schedule: Schedule,
                  plan: Optional[CompressionPlan] = None,
                  use_kernel: bool = False,
-                 telemetry: Optional[Any] = None):
+                 telemetry: Optional[Any] = None,
+                 trace: Optional[Any] = None):
         self.graph = graph
         self.schedule = schedule
         self.plan = plan or plan_none(graph, schedule.placement)
@@ -155,6 +157,7 @@ class DecentralizedRuntime:
                            for s, dev in enumerate(schedule.stage_devices())]
         self.traffic: List[OpData] = []
         self.telemetry = telemetry
+        self.trace = trace
         self.ef_state: Optional[Dict[str, jax.Array]] = None
         self.step_index = 0
 
@@ -162,15 +165,24 @@ class DecentralizedRuntime:
         self.traffic.append(msg)
 
     def _timing_cb(self, mb_idx: int):
-        if self.telemetry is None:
+        trace = self.trace if getattr(self.trace, "enabled", False) else None
+        if self.telemetry is None and trace is None:
             return None
         devs = self.schedule.stage_devices()
 
         def cb(stage: int, backward: bool, seconds: float) -> None:
-            self.telemetry.record(StepTiming(
-                node=devs[stage], stage=stage, micro_batch=mb_idx,
-                backward=backward, compute_seconds=seconds,
-                step=self.step_index))
+            if self.telemetry is not None:
+                self.telemetry.record(StepTiming(
+                    node=devs[stage], stage=stage, micro_batch=mb_idx,
+                    backward=backward, compute_seconds=seconds,
+                    step=self.step_index))
+            if trace is not None:
+                trace.complete_wall(
+                    CAT_BWD if backward else CAT_FWD,
+                    f"{'B' if backward else 'F'}{stage}.mb{mb_idx}",
+                    f"dev{devs[stage]}", seconds,
+                    args={"stage": stage, "mb": mb_idx,
+                          "step": self.step_index})
         return cb
 
     def train_step(self, params: Mapping[str, Any],
@@ -185,11 +197,11 @@ class DecentralizedRuntime:
                     self.ef_state = init_ef_state(self.prog, params, mb)
                 loss, grads, self.ef_state = pipeline_loss_and_grad_ef(
                     self.prog, params, mb, self.plan, self.ef_state,
-                    self.use_kernel, timing_cb=cb)
+                    self.use_kernel, timing_cb=cb, trace=self.trace)
             else:
                 loss, grads = pipeline_loss_and_grad(
                     self.prog, params, mb, self.plan, self.use_kernel,
-                    timing_cb=cb)
+                    timing_cb=cb, trace=self.trace)
             # traffic accounting (envelope per cross-stage edge, FP + BP)
             for si, sd in enumerate(self.prog.subdags):
                 for a in sd.required_acti:
@@ -278,7 +290,8 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                        n_micro: int = 1,
                        telemetry: Optional[Any] = None,
                        step: int = 0,
-                       cost_model: Optional[EdgeCostModel] = None) -> SimResult:
+                       cost_model: Optional[EdgeCostModel] = None,
+                       trace: Optional[Any] = None) -> SimResult:
     """Discrete-event GPipe replay: FP fills stage by stage per micro-batch,
     then BP drains in reverse.  Each device is a serial resource; each
     directed stage pair is a serial link; compute of micro-batch m+1 overlaps
@@ -297,7 +310,15 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
     default one is built from ``plan``.  Either way the model is rebased
     onto ``cluster`` — compute charges read ``cluster.devices`` directly,
     so comm must price against the same topology or the SimResult would
-    silently mix believed and true clusters."""
+    silently mix believed and true clusters.
+
+    ``trace`` (a :class:`repro.obs.trace.TraceRecorder`) receives one
+    sim-clock span per stage compute window (``stage.fwd``/``stage.bwd`` on
+    track ``dev<i>``) and one per boundary transfer (``link.transfer`` on
+    track ``link <src>-><dst>``, args carrying exact wire ``nbytes`` and the
+    ``charge`` device — the same consumer-side attribution StepTiming uses).
+    Tracing is observation only: timings are computed identically with it on
+    or off (pinned in tests)."""
     if cost_model is not None:
         model = cost_model.with_cluster(cluster)
     else:
@@ -305,6 +326,7 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                               plan or plan_none(graph, schedule.placement))
 
     record_link = getattr(telemetry, "record_link", None)
+    tracer = trace if getattr(trace, "enabled", False) else None
 
     def run_pass(backward: bool, t0: float, events, device_free, busy):
         stages, comp, edges, nbytes = _stage_tables(
@@ -318,6 +340,8 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
         done = {}  # (stage, mb) -> finish time
         comm_total = 0.0
         comm_charged: Dict[Tuple[int, int], float] = {}  # (stage, mb) -> s
+        cat = CAT_BWD if backward else CAT_FWD
+        tag = "B" if backward else "F"
         for mb in range(n_micro):
             for pos, st in enumerate(order):
                 dev = stages[st]
@@ -336,12 +360,22 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                         record_link(LinkTiming(
                             src=stages[src], dst=stages[st], nbytes=ebytes,
                             seconds=tcomm, backward=backward, step=step))
+                    if tracer is not None:
+                        tracer.span(
+                            CAT_TRANSFER, f"{tag}xfer.mb{mb}",
+                            f"link {stages[src]}->{stages[st]}",
+                            start, start + tcomm,
+                            args={"nbytes": ebytes, "mb": mb,
+                                  "charge": stages[charge]})
                     ready = max(ready, start + tcomm)
                 start = max(ready, device_free.get(dev, t0))
                 end = start + comp[st]
                 device_free[dev] = end
                 busy[dev] = busy.get(dev, 0.0) + comp[st]
                 done[(st, mb)] = end
+                if tracer is not None:
+                    tracer.span(cat, f"{tag}{st}.mb{mb}", f"dev{dev}",
+                                start, end, args={"stage": st, "mb": mb})
                 events.append((start, end,
                                f"{'B' if backward else 'F'}{st}.mb{mb}"))
         if telemetry is not None:

@@ -30,6 +30,7 @@ import numpy as np
 
 from .compression import CompressionPlan, compress_for_edge, plan_none
 from .opgraph import OpGraph, OpType, SubDag
+from ..obs.trace import CAT_ENCODE
 
 
 Params = Mapping[str, Any]
@@ -37,6 +38,21 @@ Params = Mapping[str, Any]
 # Measured-wall-clock hook: (stage_index, backward, seconds) per stage call.
 # The DecentralizedRuntime wraps this into StepTiming telemetry samples.
 TimingCb = Callable[[int, bool, float], None]
+
+
+def _traced_compress(trace, name: str, track: str, backward: bool,
+                     ratio: float, fn):
+    """Run one boundary compression, recording a wall-clock encode span when
+    tracing.  The decode half is fused into the same op (topk_mask is
+    select→decode without materializing the wire format), so the span covers
+    the whole codec; ``ratio<=1`` edges transport dense and record nothing."""
+    if trace is None or not getattr(trace, "enabled", False) or ratio <= 1.0:
+        return fn()
+    with trace.region(CAT_ENCODE, name, track,
+                      args={"ratio": ratio, "backward": backward}):
+        out = fn()
+        jax.block_until_ready(out)
+    return out
 
 
 def make_stage_fn(graph: OpGraph, subdag: SubDag
@@ -127,12 +143,15 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
                      plan: Optional[CompressionPlan] = None,
                      use_kernel: bool = False,
                      compress_bwd: bool = True,
-                     timing_cb: Optional[TimingCb] = None
+                     timing_cb: Optional[TimingCb] = None,
+                     trace: Optional[Any] = None
                      ) -> Tuple[jax.Array, List[Any], List[Dict[str, jax.Array]]]:
     """Forward sweep.  Returns (total_loss, vjp closures per stage, the
     per-stage received ext_acts — needed to key backward cotangents).
     ``timing_cb(stage, backward=False, seconds)`` receives each stage's
-    measured host wall-clock (telemetry hook; None = no instrumentation)."""
+    measured host wall-clock (telemetry hook; None = no instrumentation);
+    ``trace`` additionally records wall-clock ``compress.encode`` spans per
+    compressed boundary edge."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
     stage_params = prog.split_params(params)
     stage_inputs = prog.split_inputs(inputs)
@@ -163,8 +182,10 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
                 # plan is keyed per (producer op, consumer op) — same ratio
                 # for all consumers on one CompNode by construction.
                 ratio = max([plan.ratio(a, c) for c in consumer_ops] or [1.0])
-                mailbox[(a, cj)] = compress_for_edge(out, ratio, use_kernel,
-                                                     compress_bwd)
+                mailbox[(a, cj)] = _traced_compress(
+                    trace, f"enc {a}->s{cj}", f"stage{si}", False, ratio,
+                    lambda out=out, ratio=ratio: compress_for_edge(
+                        out, ratio, use_kernel, compress_bwd))
     return total_loss, vjps, received
 
 
@@ -172,7 +193,8 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
                       received: List[Dict[str, jax.Array]],
                       plan: Optional[CompressionPlan] = None,
                       use_kernel: bool = False,
-                      timing_cb: Optional[TimingCb] = None) -> Dict[str, Any]:
+                      timing_cb: Optional[TimingCb] = None,
+                      trace: Optional[Any] = None) -> Dict[str, Any]:
     """Backward sweep in reverse stage order; boundary gradients are
     compressed on the same links as their forward activations."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
@@ -203,7 +225,10 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
             producer_ops_here = [n for n in sd.node_names
                                  if a in prog.graph.nodes[n].args]
             ratio = max([plan.ratio(a, c) for c in producer_ops_here] or [1.0])
-            g = compress_for_edge(g, ratio, use_kernel)
+            g = _traced_compress(
+                trace, f"enc grad({a})", f"stage{si}", True, ratio,
+                lambda g=g, ratio=ratio: compress_for_edge(g, ratio,
+                                                           use_kernel))
             grad_mail[a] = grad_mail[a] + g if a in grad_mail else g
     return grads
 
@@ -212,13 +237,15 @@ def pipeline_loss_and_grad(prog: PipelineProgram, params: Params,
                            inputs: Mapping[str, jax.Array],
                            plan: Optional[CompressionPlan] = None,
                            use_kernel: bool = False,
-                           timing_cb: Optional[TimingCb] = None
+                           timing_cb: Optional[TimingCb] = None,
+                           trace: Optional[Any] = None
                            ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One RAD iteration (all stages, one micro-batch)."""
     loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
-                                            use_kernel, timing_cb=timing_cb)
+                                            use_kernel, timing_cb=timing_cb,
+                                            trace=trace)
     grads = pipeline_backward(prog, vjps, received, plan, use_kernel,
-                              timing_cb=timing_cb)
+                              timing_cb=timing_cb, trace=trace)
     return loss, grads
 
 
@@ -260,7 +287,8 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
                               plan: CompressionPlan,
                               ef_state: Dict[str, jax.Array],
                               use_kernel: bool = False,
-                              timing_cb: Optional[TimingCb] = None
+                              timing_cb: Optional[TimingCb] = None,
+                              trace: Optional[Any] = None
                               ) -> Tuple[jax.Array, Dict[str, Any],
                                          Dict[str, jax.Array]]:
     """RAD iteration with error feedback on the BACKWARD (gradient) edges
@@ -277,7 +305,7 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
     # would sparsify the cotangent before EF sees it — double compression).
     loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
                                             use_kernel, compress_bwd=False,
-                                            timing_cb=timing_cb)
+                                            timing_cb=timing_cb, trace=trace)
     n_stages = len(prog.subdags)
     grad_mail: Dict[str, jax.Array] = {}
     grads: Dict[str, Any] = {}
@@ -300,7 +328,10 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
             if ratio > 1.0:
                 corrected = g + ef_state[a].astype(g.dtype)
                 k = ratio_to_k(int(np.prod(g.shape)), ratio)
-                sent = topk_mask(corrected, k, use_kernel=use_kernel)
+                sent = _traced_compress(
+                    trace, f"enc ef({a})", f"stage{si}", True, ratio,
+                    lambda corrected=corrected, k=k: topk_mask(
+                        corrected, k, use_kernel=use_kernel))
                 new_ef[a] = corrected - sent
                 g = sent
             grad_mail[a] = grad_mail[a] + g if a in grad_mail else g

@@ -76,6 +76,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.checkpoint import deserialize_state, serialize_state
 from repro.core.compression import CompressionPlan, plan_adatopk, plan_none
 from repro.core.costmodel import EdgeCostModel, fit_link_corrections
@@ -87,6 +89,12 @@ from repro.core.network import (with_link_slowdowns, with_shared_links,
                                 with_slowdowns)
 from repro.core.opgraph import OpGraph, OpProfile
 from repro.core.scheduler import Schedule, schedule_joint, schedule_opfence
+from repro.obs import (CalibrationRecord, CandidateScore, DetectorRecord,
+                       EpochFlightRecord, FlightRecorder, MetricsRegistry,
+                       MetricsTelemetrySink, ReplanRecord, TelemetryBus,
+                       TraceRecorder)
+from repro.obs.record import links_to_str
+from repro.obs.trace import CAT_CHECKPOINT, CAT_CONTROLLER, CAT_MIGRATION
 from repro.optim.optimizers import Optimizer
 
 from .detector import StragglerDetector
@@ -219,7 +227,10 @@ class ElasticController:
                  calibrate_hysteresis: float = 0.2,
                  replan_pace_margin: float = 0.25,
                  use_kernel: bool = False,
-                 initial_alive: Optional[Sequence[int]] = None):
+                 initial_alive: Optional[Sequence[int]] = None,
+                 tracer: Optional[TraceRecorder] = None,
+                 flight: Optional[FlightRecorder] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if migration_mode not in ("stop", "overlap"):
             raise ValueError(f"unknown migration_mode {migration_mode!r}")
         if planner not in ("opfence", "joint"):
@@ -264,6 +275,18 @@ class ElasticController:
                              min_observations=detector_min_obs)
         self.telemetry = TelemetryLog(window=telemetry_window,
                                       mad_k=telemetry_mad_k)
+        # Observability (all optional, all no-ops when absent): the tracer
+        # records sim-clock spans (named ``tracer`` — the 4th positional arg
+        # ``trace`` is the churn script), the flight recorder logs every
+        # broker decision, and the metrics registry aggregates counters.
+        # Telemetry flows through a bus so the broker's TelemetryLog and the
+        # metrics sink observe the exact same sample stream (parity tested).
+        self.tracer = tracer
+        self.flight = flight
+        self.metrics = metrics
+        self.telemetry_bus = TelemetryBus([self.telemetry])
+        if metrics is not None:
+            self.telemetry_bus.subscribe(MetricsTelemetrySink(metrics))
 
         self.membership = MembershipView(len(cluster), trace, lease_s=lease_s,
                                          initial_alive=initial_alive)
@@ -362,12 +385,14 @@ class ElasticController:
         refill_s = pipeline_fill_seconds(
             self.graph, self.profiles, self.schedule,
             self.true_cluster(), self.plan) if charge_refill else 0.0
+        clock_before = self.clock
         self.clock += migrate_s + refill_s
         self._obs_cache = None
         self.telemetry.clear()   # a new schedule invalidates old samples
         self.runtime = DecentralizedRuntime(self.graph, self.schedule,
                                             self.plan,
-                                            use_kernel=self.use_kernel)
+                                            use_kernel=self.use_kernel,
+                                            trace=self.tracer)
         # the detector's reference prediction must share the epoch's
         # compression plan AND the calibrated link corrections with the
         # telemetry it is compared against — a dense or spec-priced reference
@@ -393,6 +418,72 @@ class ElasticController:
             refill_seconds=refill_s, rollback_steps=rollback_steps,
             replan_mode=replan_mode, background_bytes=background_bytes,
             overlap_seconds=overlap_seconds))
+        self._observe_epoch(self.epoch_records[-1], migration, model,
+                            clock_before)
+
+    def _observe_epoch(self, rec: EpochRecord,
+                       migration: Optional[MigrationPlan],
+                       model: EdgeCostModel, clock_before: float) -> None:
+        """Fold one installed epoch into the observability layer: a flight
+        record, the per-cause metrics, and sim-clock spans for the blocking
+        migration's bulk transfers (shifted from the migration simulator's
+        local origin to where the stall actually sat on the run clock)."""
+        if self.flight is not None:
+            self.flight.log(EpochFlightRecord(
+                step=rec.at_step, clock=self.clock, epoch=rec.epoch,
+                cause=rec.cause, stage_devices=list(rec.stage_devices),
+                n_moves=rec.n_moves, moved_bytes=rec.moved_bytes,
+                migrate_seconds=rec.migrate_seconds,
+                refill_seconds=rec.refill_seconds,
+                rollback_steps=rec.rollback_steps,
+                replan_mode=rec.replan_mode))
+        if self.metrics is not None:
+            self.metrics.counter("replan_count", cause=rec.cause).inc()
+            if rec.rollback_steps:
+                self.metrics.counter("rollback_steps").inc(rec.rollback_steps)
+            if rec.moved_bytes:
+                self.metrics.counter("migrated_bytes", kind="blocking").inc(
+                    rec.moved_bytes)
+            if rec.background_bytes:
+                self.metrics.counter("migrated_bytes", kind="background").inc(
+                    rec.background_bytes)
+            planned, realized = self._compression_ratios(model)
+            self.metrics.gauge("compression_ratio_planned").set(planned)
+            self.metrics.gauge("compression_ratio_realized").set(realized)
+        if self.tracer is not None and self.tracer.enabled:
+            if migration is not None:
+                for (t0, t1, label) in migration.sim.events:
+                    self.tracer.span(
+                        CAT_CHECKPOINT if "ckpt" in label else CAT_MIGRATION,
+                        label, "migration", clock_before + t0,
+                        clock_before + t1, args={"epoch": rec.epoch})
+            self.tracer.instant(
+                CAT_CONTROLLER, f"epoch:{rec.cause}", "controller",
+                t=self.clock,
+                args={"epoch": rec.epoch, "step": rec.at_step,
+                      "mode": rec.replan_mode,
+                      "stage_devices": list(rec.stage_devices)})
+
+    def _compression_ratios(self, model: EdgeCostModel
+                            ) -> Tuple[float, float]:
+        """(planned, realized) aggregate compression over the installed
+        plan's cross edges: planned is Σdense / Σ(dense/ratio) — what the
+        plan asked for; realized is Σdense / Σwire at the exact integer wire
+        encoding — what the wire actually carries (index overhead included).
+        Both 1.0 for an uncompressed epoch."""
+        dense = asked = wire = 0.0
+        for (a, n) in model.cross_edges(self.schedule.placement):
+            d = model.dense_bytes(a)
+            dense += d
+            asked += d / max(model.ratio(a, n), 1.0)
+            wire += model.edge_wire_bytes(a, n)
+        if dense <= 0.0:
+            return 1.0, 1.0
+        return dense / max(asked, 1e-12), dense / max(wire, 1e-12)
+
+    def _cur_step(self) -> int:
+        """Data step the run loop last completed (0 before any step)."""
+        return self.step_records[-1].step if self.step_records else 0
 
     @property
     def epoch(self) -> int:
@@ -433,6 +524,13 @@ class ElasticController:
                 step=step, epoch=self.epoch, loss=loss_val,
                 step_seconds=sim_time, clock=self.clock,
                 overlapping=self._migrating is not None))
+            if self.metrics is not None:
+                self.metrics.histogram("step_seconds").observe(sim_time)
+                ef = self.runtime.ef_state
+                if ef:
+                    for a in sorted(ef):
+                        self.metrics.gauge("ef_residual_norm", edge=a).set(
+                            float(np.linalg.norm(np.asarray(ef[a]))))
             # a degraded node shows up as aggregated telemetry > prediction
             self.detector.observe(self.telemetry.node_step_times())
             self._steps_since_fit += 1
@@ -516,10 +614,14 @@ class ElasticController:
                     # calibration confirmed the active plan (schedule AND
                     # compression) is still the best response — no epoch
                     # change, no migration, no refill
+                    self._record_replan(step, cause, dead, joined, rp,
+                                        plan_only=False, confirmed=True)
                     continue
                 # same cut, re-allocated compression: a hot plan swap moves
                 # no state and never stalls the pipeline
                 plan_only = same_assign
+            self._record_replan(step, cause, dead, joined, rp,
+                                plan_only=plan_only)
             if self.migration_mode == "overlap":
                 self._begin_overlap(rp, cause=cause,
                                     events=[d.event for d in deltas],
@@ -681,24 +783,34 @@ class ElasticController:
         busy = self._migrating.busy if self._migrating is not None else ()
         key = (tuple(sorted(self.membership.slow_factor.items())),
                tuple(sorted(self.membership.link_factor.items())), busy)
+        tracing = self.tracer is not None and self.tracer.enabled
         if self._obs_cache is None or self._obs_cache[0] != key:
             true_cl = self.true_cluster()
             if busy:
                 true_cl = with_shared_links(
                     true_cl, busy, self.overlap_bandwidth_share)
             sink = TelemetrySink()
+            # spans are captured once per regime into a local recorder at a
+            # zero origin and replayed per step at the step's clock offset —
+            # the simulator itself runs identically with tracing on or off
+            span_rec = TraceRecorder() if tracing else None
             sim = simulate_iteration(self.graph, self.profiles, self.schedule,
                                      true_cl, self.plan,
-                                     n_micro=self.n_micro, telemetry=sink)
+                                     n_micro=self.n_micro, telemetry=sink,
+                                     trace=span_rec)
             self._obs_cache = (key, sim.iteration_time, sink.samples,
-                               sink.link_samples)
-        _, sim_time, samples, link_samples = self._obs_cache
-        self.telemetry.record_step(samples, step=step)
+                               sink.link_samples,
+                               tuple(span_rec.events()) if span_rec else ())
+        _, sim_time, samples, link_samples, spans = self._obs_cache
+        if tracing and spans:
+            self.tracer.replay(spans, dt=self.clock,
+                               extra_args={"step": step})
+        self.telemetry_bus.record_step(samples, step=step)
         if self._migrating is None:
             # link observations taken while a background stream contends on
             # the wire measure the (transient) shared bandwidth, not the
             # link's truth — calibrating on them would thrash
-            self.telemetry.record_link_step(link_samples, step=step)
+            self.telemetry_bus.record_link_step(link_samples, step=step)
         return sim_time
 
     # ------------------------------------------------------- transitions ---
@@ -717,6 +829,19 @@ class ElasticController:
                    if self.believed_factors.get(d) is None}
         if flagged:
             self.believed_factors.update(flagged)
+            if self.metrics is not None:
+                self.metrics.counter("detector_trips").inc(len(flagged))
+            for d, f in sorted(flagged.items()):
+                if self.flight is not None:
+                    self.flight.log(DetectorRecord(
+                        step=self._cur_step(), clock=self.clock, node=int(d),
+                        severity=float(self.detector.severity(d)),
+                        believed_factor=float(f)))
+                if self.tracer is not None and self.tracer.enabled:
+                    self.tracer.instant(
+                        CAT_CONTROLLER, f"detector:flag dev{int(d)}",
+                        "controller", t=self.clock,
+                        args={"node": int(d), "believed_factor": float(f)})
             return "straggler", []
         recovered = self._rehabilitated()
         # a node drained of ops has no observable stage time; trust its own
@@ -772,31 +897,60 @@ class ElasticController:
             return False
         fitted = fit_link_corrections(samples, self.base_cluster)
         changed = False
+        verdicts: Dict[Tuple[int, int], str] = {}
         for lk in sorted(fitted):
             new = fitted[lk]
             old = self.link_corrections.get(lk, 1.0)
             if abs(new - old) <= self.calibrate_hysteresis * old:
+                verdicts[lk] = "hysteresis"
                 continue
             if abs(new - 1.0) <= self.calibrate_hysteresis:
                 self.link_corrections.pop(lk, None)
+                verdicts[lk] = "healed"
             else:
                 self.link_corrections[lk] = new
+                verdicts[lk] = "adopted"
             changed = True
-        if not changed:
-            return False
-        self.calibration_count += 1
-        believed = self.believed_cluster()
-        model = self.believed_model(believed)
-        self.detector.reprice(
-            predict_step_times(self.graph, self.profiles, believed,
-                               self.schedule.placement, cost_model=model))
-        pace = model.stage_pace(self.schedule)
-        diverged = self._installed_pace > 0.0 and \
-            pace > (1.0 + self.replan_pace_margin) * self._installed_pace
-        # re-arm on the freshly calibrated pace either way: the next trigger
-        # needs *further* divergence, not the same one re-observed every
-        # window (and a re-plan that keeps the schedule must not loop)
-        self._installed_pace = pace
+        installed_pace_before = self._installed_pace
+        diverged = False
+        pace = installed_pace_before
+        if changed:
+            self.calibration_count += 1
+            believed = self.believed_cluster()
+            model = self.believed_model(believed)
+            self.detector.reprice(
+                predict_step_times(self.graph, self.profiles, believed,
+                                   self.schedule.placement, cost_model=model))
+            pace = model.stage_pace(self.schedule)
+            diverged = self._installed_pace > 0.0 and \
+                pace > (1.0 + self.replan_pace_margin) * self._installed_pace
+            # re-arm on the freshly calibrated pace either way: the next
+            # trigger needs *further* divergence, not the same one
+            # re-observed every window (and a re-plan that keeps the
+            # schedule must not loop)
+            self._installed_pace = pace
+        if changed and self.metrics is not None:
+            self.metrics.counter("calibration_fits").inc()
+            for lk, v in sorted(self.link_corrections.items()):
+                self.metrics.gauge("link_correction",
+                                   link=f"{lk[0]}->{lk[1]}").set(float(v))
+        if self.flight is not None:
+            self.flight.log(CalibrationRecord(
+                step=self._cur_step(), clock=self.clock,
+                window=links_to_str({k: len(v) for k, v in samples.items()}),
+                fitted=links_to_str({k: float(v)
+                                     for k, v in fitted.items()}),
+                verdicts=links_to_str(verdicts),
+                installed=links_to_str({k: float(v) for k, v in
+                                        self.link_corrections.items()}),
+                repriced=changed, installed_pace=installed_pace_before,
+                calibrated_pace=pace, diverged=diverged))
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant(
+                CAT_CONTROLLER, "calibration", "controller", t=self.clock,
+                args={"fitted": links_to_str({k: round(float(v), 4)
+                                              for k, v in fitted.items()}),
+                      "repriced": changed, "diverged": diverged})
         return diverged
 
     def _rehabilitated(self) -> List[int]:
@@ -812,6 +966,49 @@ class ElasticController:
                     and self.detector.severity(d) <= f * 1.05):
                 out.append(d)
         return out
+
+    def _replan_reason(self, cause: str, dead: Sequence[int],
+                       joined: Sequence[int]) -> str:
+        """Human-readable trigger description for the flight log."""
+        if cause == "failure":
+            return f"lease expired: dead={sorted(int(d) for d in dead)}"
+        if cause == "join":
+            return f"admitted: joined={sorted(int(j) for j in joined)}"
+        if cause == "straggler":
+            flags = {int(d): round(float(f), 3)
+                     for d, f in sorted(self.believed_factors.items())}
+            return f"detector flagged believed factors {flags}"
+        if cause == "recovery":
+            return "believed stragglers rehabilitated"
+        if cause == "calibration":
+            return (f"calibrated pace of active plan diverged more than "
+                    f"{self.replan_pace_margin:.0%} past its installed pace")
+        return cause
+
+    def _record_replan(self, at_step: int, cause: str, dead: Sequence[int],
+                       joined: Sequence[int], rp: ReplanResult,
+                       plan_only: bool, confirmed: bool = False) -> None:
+        """One flight record per re-plan decision, every candidate priced —
+        including the zero-migration ``keep`` when it was offered."""
+        if self.flight is None and (
+                self.tracer is None or not self.tracer.enabled):
+            return
+        reason = self._replan_reason(cause, dead, joined)
+        if confirmed:
+            reason += " (confirmed: same cut and plan — no epoch change)"
+        if self.flight is not None:
+            self.flight.log(ReplanRecord(
+                step=at_step, clock=self.clock, cause=cause, reason=reason,
+                dead=sorted(int(d) for d in dead),
+                joined=sorted(int(j) for j in joined),
+                candidates=[CandidateScore(**s) for s in rp.scores],
+                winner=rp.mode, plan_only=plan_only))
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.instant(
+                CAT_CONTROLLER, f"replan:{cause}", "controller", t=self.clock,
+                args={"winner": rp.mode, "reason": reason,
+                      "scores": {s["name"]: round(s["score"], 6)
+                                 for s in rp.scores}})
 
     def _replan(self, dead: Sequence[int],
                 joined: Sequence[int] = ()) -> ReplanResult:

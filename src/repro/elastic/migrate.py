@@ -32,6 +32,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import deserialize_state, serialize_state
+from repro.obs.trace import CAT_CHECKPOINT, CAT_MIGRATION
 from .replan import OpMove
 
 
@@ -100,7 +101,8 @@ class MigrationOutcome:
 
 
 def apply_moves(params: Mapping[str, Any], opt_state: Any,
-                moves: Sequence[OpMove]) -> MigrationOutcome:
+                moves: Sequence[OpMove],
+                trace: Optional[Any] = None) -> MigrationOutcome:
     """Execute a migration plan: one envelope per (src, dst) link, each op's
     state serialized, shipped, and restored through the checkpoint format.
 
@@ -108,10 +110,16 @@ def apply_moves(params: Mapping[str, Any], opt_state: Any,
     proves (and the controller relies on) is that the wire round-trip is
     bit-exact, so a multi-process deployment of the same envelopes would
     reconstruct identical numerics.
+
+    ``trace`` (a :class:`repro.obs.trace.TraceRecorder`) records one
+    wall-clock span per envelope: ``checkpoint.restore`` for streams out of
+    the broker's store (``src=None``), ``migrate.stream`` for peer-to-peer
+    transfers, args carrying exact envelope bytes and op count.
     """
     groups: Dict[Tuple[Optional[int], int], List[str]] = {}
     for m in moves:
         groups.setdefault((m.src, m.dst), []).append(m.op)
+    tracer = trace if getattr(trace, "enabled", False) else None
 
     new_params = dict(params)
     new_opt = opt_state
@@ -122,10 +130,19 @@ def apply_moves(params: Mapping[str, Any], opt_state: Any,
         ops = [o for o in groups[key] if o in params]
         if not ops:
             continue
+        src, dst = key
+        token = None
+        if tracer is not None:
+            lbl = f"{'ckpt' if src is None else src}->{dst}"
+            token = tracer.begin(
+                CAT_CHECKPOINT if src is None else CAT_MIGRATION,
+                lbl, f"migrate {lbl}", args={"n_ops": len(ops)})
         blob = pack_op_state(params, opt_state, ops)
         wire += len(blob)
         n_env += 1
         p_sub, o_sub = unpack_op_state(blob, params, opt_state, ops)
+        if tracer is not None:
+            tracer.end(token, args={"nbytes": len(blob)})
         new_params.update(p_sub)
         if new_opt is not None and o_sub is not None:
             new_opt = new_opt._replace(

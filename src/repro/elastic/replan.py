@@ -80,6 +80,11 @@ class ReplanResult:
     alive: List[int]
     dead: List[int]
     mode: str = "full"           # which candidate won: full | anchored | keep
+    # every candidate as priced by the migration-aware choice, in scoring
+    # order: {name, pace, migration_bytes, migration_seconds, score, winner}.
+    # Plain dicts (not obs dataclasses) so this layer stays import-light; the
+    # controller's flight recorder lifts them into CandidateScore records.
+    scores: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
 
 
 def state_bytes(profile: OpProfile, opt_state_mult: float = 2.0,
@@ -439,6 +444,7 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
         raise RuntimeError("no feasible re-plan candidate")
 
     best: Optional[Tuple[float, str, Schedule, List[OpMove], Any]] = None
+    scores: List[Dict[str, Any]] = []
     for name, sched in sorted(candidates.items()):
         moves = diff_schedules(old_schedule, sched, profiles, dead=dead,
                                opt_state_mult=opt_state_mult)
@@ -447,10 +453,17 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
         pace = sched.predicted_pace if sched.predicted_pace is not None \
             else float("inf")
         cost = sim.seconds + amortize_steps * pace
+        scores.append({"name": name, "pace": pace,
+                       "migration_bytes": float(sum(m.nbytes for m in moves)),
+                       "migration_seconds": sim.seconds, "score": cost,
+                       "winner": False})
         if best is None or cost < best[0]:
             best = (cost, name, sched, moves, sim)
     _, name, sched, moves, sim = best
+    for s in scores:
+        s["winner"] = s["name"] == name
     return ReplanResult(schedule=sched,
                         migration=MigrationPlan(moves=moves, sim=sim),
                         alive=sorted(int(a) for a in alive),
-                        dead=sorted(int(d) for d in dead), mode=name)
+                        dead=sorted(int(d) for d in dead), mode=name,
+                        scores=scores)

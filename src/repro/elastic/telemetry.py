@@ -33,6 +33,13 @@ those totals — the exact input
 planner's α–β model against the wire the traffic actually rode.  That is the
 observation half of the closed planning loop; the controller owns the fit,
 hysteresis, and re-plan trigger.
+
+Since the observability layer landed, ``TelemetryLog`` is one subscriber on
+the controller's :class:`repro.obs.bus.TelemetryBus` rather than the sole
+consumer of executor samples: the bus fans each ``StepTiming``/``LinkTiming``
+out to every subscriber (this log, the metrics registry sink, …) with
+per-sample semantics identical to feeding the log directly — bus-fed and
+direct-fed logs agree bit for bit (tested).
 """
 from __future__ import annotations
 

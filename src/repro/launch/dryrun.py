@@ -14,6 +14,9 @@ per-device footprint; ``cost_analysis()`` + the HLO collective parse feed
 
 The two os.environ lines above MUST stay before any other import: jax locks
 the device count at first initialization.
+
+Sweep progress is reported as :mod:`repro.obs.slog` structured events
+(``--log-level``/``--quiet`` apply); per-run JSON artifacts are unchanged.
 """
 import argparse
 import json
@@ -122,6 +125,8 @@ def run_one(arch_id: str, shape_name: str, multi_pod: bool,
 
 def main() -> None:
     from repro.configs import ARCH_IDS, INPUT_SHAPES, resolve
+    from repro.obs import MetricsRegistry
+    from repro.obs import slog
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -137,7 +142,10 @@ def main() -> None:
     ap.add_argument("--overrides", default=None,
                     help="named perf-override set (repro.perf.overrides)")
     ap.add_argument("--skip-existing", action="store_true")
+    slog.add_logging_args(ap)
     args = ap.parse_args()
+    log = slog.get_logger("dryrun", metrics=MetricsRegistry(),
+                          level=slog.level_from_args(args))
 
     assigned = [a for a in ARCH_IDS if a != "gpt2-xl"]
     archs = assigned if (args.all or not args.arch) else [args.arch]
@@ -150,31 +158,35 @@ def main() -> None:
         for shape in shapes:
             for mp in pods:
                 mesh_name = "2x16x16" if mp else "16x16"
-                tag = f"{arch:24s} {shape:12s} {mesh_name:8s}"
                 if args.skip_existing:
                     suffix = ("__unroll" if args.unroll else "") + \
                         (f"__{args.overrides}" if args.overrides else "")
                     p = os.path.join(args.out,
                                      f"{arch}__{shape}__{mesh_name}{suffix}.json")
                     if os.path.exists(p):
-                        print(f"{tag} cached")
+                        log.event("dryrun_cached", arch=arch, shape=shape,
+                                  mesh=mesh_name)
                         continue
                 rec = run_one(arch, shape, mp, args.out, args.save_hlo,
                               args.unroll, args.overrides)
                 results.append(rec)
                 if rec["status"] == "ok":
                     r = rec["roofline"]
-                    print(f"{tag} OK compile={rec['compile_s']:7.1f}s "
-                          f"mem/dev={rec['mem']['peak_per_device']/2**30:6.2f}GiB "
-                          f"dom={r['dominant']:10s} "
-                          f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
-                          f"coll={r['collective_s']:.2e}")
+                    log.event("dryrun_ok", arch=arch, shape=shape,
+                              mesh=mesh_name, compile_s=rec["compile_s"],
+                              mem_gib=rec["mem"]["peak_per_device"] / 2**30,
+                              dominant=r["dominant"],
+                              compute_s=r["compute_s"],
+                              memory_s=r["memory_s"],
+                              collective_s=r["collective_s"])
                 elif rec["status"] == "skipped":
-                    print(f"{tag} SKIP ({rec['note'][:60]})")
+                    log.event("dryrun_skip", arch=arch, shape=shape,
+                              mesh=mesh_name, note=rec["note"][:60])
                 else:
-                    print(f"{tag} FAIL {rec['error'][:140]}")
+                    log.error("dryrun_fail", arch=arch, shape=shape,
+                              mesh=mesh_name, error=rec["error"][:140])
     n_fail = sum(r["status"] == "fail" for r in results)
-    print(f"\n{len(results)} runs, {n_fail} failures")
+    log.event("dryrun_done", runs=len(results), failures=n_fail)
     raise SystemExit(1 if n_fail else 0)
 
 

@@ -2,6 +2,9 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
         --size smoke --batch 4 --prompt-len 16 --gen 24
+
+Timing goes through :mod:`repro.obs.slog` structured events (respects
+``--log-level``/``--quiet``); sampled generations print at debug level.
 """
 from __future__ import annotations
 
@@ -12,6 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry
+from repro.obs import slog
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -21,7 +27,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
+    slog.add_logging_args(ap)
     args = ap.parse_args()
+    log = slog.get_logger("serve", metrics=MetricsRegistry(),
+                          level=slog.level_from_args(args))
 
     from repro.configs import resolve
     from repro.models import causal_lm
@@ -67,13 +76,14 @@ def main() -> None:
     jax.block_until_ready(tok)
     t_decode = (time.time() - t0) / max(args.gen - 1, 1)
     gen = np.stack([np.asarray(t) for t in out], axis=1)
-    print(f"prefill: {t_prefill * 1e3:.1f} ms for "
-          f"{args.batch}x{args.prompt_len} tokens")
-    print(f"decode:  {t_decode * 1e3:.2f} ms/token "
-          f"({args.batch / max(t_decode, 1e-9):.1f} tok/s aggregate)")
+    log.event("prefill", ms=t_prefill * 1e3, batch=args.batch,
+              prompt_len=args.prompt_len)
+    log.event("decode", ms_per_token=t_decode * 1e3,
+              tok_per_s=args.batch / max(t_decode, 1e-9))
     for b in range(min(args.batch, 2)):
-        print(f"req{b}: prompt={np.asarray(prompts[b])[:8].tolist()}... "
-              f"-> {gen[b][:12].tolist()}...")
+        log.debug("sample", req=b,
+                  prompt=np.asarray(prompts[b])[:8].tolist(),
+                  generated=gen[b][:12].tolist())
 
 
 if __name__ == "__main__":

@@ -10,6 +10,10 @@ Two modes (DESIGN.md §4):
 
     PYTHONPATH=src python -m repro.launch.train --arch gpt2-xl --size smoke \
         --mode fusion --steps 50 --compress adatopk --ratio 100
+
+Reporting goes through :mod:`repro.obs.slog` — ``event k=v`` lines on
+stderr honoring ``--log-level``/``--quiet``, every numeric field mirrored
+into a :class:`repro.obs.metrics.MetricsRegistry` gauge.
 """
 from __future__ import annotations
 
@@ -19,6 +23,9 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import MetricsRegistry
+from repro.obs import slog
 
 
 def main() -> None:
@@ -37,7 +44,11 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
+    slog.add_logging_args(ap)
     args = ap.parse_args()
+    metrics = MetricsRegistry()
+    log = slog.get_logger("train", metrics=metrics,
+                          level=slog.level_from_args(args))
 
     from repro.configs import resolve
     from repro.data import SyntheticLM
@@ -52,13 +63,14 @@ def main() -> None:
                 weight_decay=0.0)
 
     if args.mode == "gspmd":
-        losses = _train_gspmd(cfg, ds, opt, args)
+        losses = _train_gspmd(cfg, ds, opt, args, log)
     else:
-        losses = _train_fusion(cfg, ds, opt, args)
-    print(f"final_loss={losses[-1]:.4f} start={losses[0]:.4f}")
+        losses = _train_fusion(cfg, ds, opt, args, log)
+    log.event("train_done", mode=args.mode, steps=args.steps,
+              final_loss=losses[-1], start_loss=losses[0])
 
 
-def _train_gspmd(cfg, ds, opt, args):
+def _train_gspmd(cfg, ds, opt, args, log):
     from repro.distributed.steps import make_train_step
     from repro.models import causal_lm
     from repro.checkpoint import save_checkpoint
@@ -75,15 +87,15 @@ def _train_gspmd(cfg, ds, opt, args):
         params, state, metrics = step_fn(params, state, batch)
         losses.append(float(metrics["loss"]))
         if i % args.log_every == 0:
-            print(f"step {i:5d} loss {losses[-1]:.4f} "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)")
+            log.event("train_step", step=i, loss=losses[-1],
+                      s_per_step=(time.time() - t0) / (i + 1))
         if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, i + 1, params,
                             metadata={"arch": cfg.name, "mode": "gspmd"})
     return losses
 
 
-def _train_fusion(cfg, ds, opt, args):
+def _train_fusion(cfg, ds, opt, args, log):
     from repro.core import (network, plan_adatopk, plan_none, plan_uniform,
                             schedule_opfence, simulate_iteration,
                             PipelineProgram, pipeline_loss_and_grad)
@@ -101,9 +113,10 @@ def _train_fusion(cfg, ds, opt, args):
                                             sch.placement, args.ratio)
             }[args.compress]()
     sim = simulate_iteration(graph, prof, sch, cluster, plan, n_micro=2)
-    print(f"[fusion] testbed {args.testbed}: {len(sch.stage_devices())} "
-          f"stages, simulated iteration {sim.iteration_time:.2f}s, "
-          f"comm {sim.comm_bytes / 1e6:.1f} MB")
+    log.event("fusion_plan", testbed=args.testbed,
+              stages=len(sch.stage_devices()),
+              sim_iteration_s=sim.iteration_time,
+              comm_mb=sim.comm_bytes / 1e6)
     prog = PipelineProgram.build(graph, sch.pipeline_subdags(graph))
     params = graph.init(jax.random.PRNGKey(0), shapes)
     state = opt.init(params)
@@ -122,8 +135,8 @@ def _train_fusion(cfg, ds, opt, args):
         params, state, loss = step(params, state, batch)
         losses.append(float(loss))
         if i % args.log_every == 0:
-            print(f"step {i:5d} loss {losses[-1]:.4f} "
-                  f"(simulated wall {sim.iteration_time * (i + 1):.1f}s)")
+            log.event("train_step", step=i, loss=losses[-1],
+                      sim_wall_s=sim.iteration_time * (i + 1))
     return losses
 
 

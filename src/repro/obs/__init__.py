@@ -1,0 +1,44 @@
+"""Swarm observability layer.
+
+One spine, four artifacts:
+
+* :mod:`repro.obs.trace`   — span-based :class:`TraceRecorder` (dual sim /
+  wall clocks, thread-safe ring buffer, deterministic ordering);
+* :mod:`repro.obs.metrics` — in-process counters / gauges / histograms;
+* :mod:`repro.obs.record`  — the ElasticController flight recorder (every
+  broker decision as a structured, replayable record);
+* :mod:`repro.obs.export`  — Chrome/Perfetto ``trace_event`` JSON + raw
+  JSONL export and the schema validator CI gates on;
+* :mod:`repro.obs.report`  — the run-report CLI rendering timeline, overlap,
+  straggler heatmap, and decision log from the artifacts;
+* :mod:`repro.obs.bus`     — telemetry fan-out so the broker's TelemetryLog,
+  the metrics registry, and user sinks all subscribe to one stream;
+* :mod:`repro.obs.slog`    — structured ``event k=v`` logging for launchers.
+
+Everything here is dependency-free (stdlib + the repo's own dataclasses) and
+no-ops when disabled, so instrumented hot paths cost nothing in production
+runs that don't ask for a trace.
+"""
+from .bus import MetricsTelemetrySink, TelemetryBus
+from .export import (events_from_dicts, read_jsonl, to_trace_events,
+                     validate_trace_events, write_chrome_trace, write_jsonl)
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .record import (CalibrationRecord, CandidateScore, DetectorRecord,
+                     EpochFlightRecord, FlightRecorder, ReplanRecord)
+from .slog import StructuredLogger, add_logging_args, get_logger
+from .trace import (CAT_BWD, CAT_CHECKPOINT, CAT_CONTROLLER, CAT_DECODE,
+                    CAT_ENCODE, CAT_FWD, CAT_MIGRATION, CAT_TRANSFER,
+                    CATEGORIES, CLOCK_SIM, CLOCK_WALL, TraceEvent,
+                    TraceRecorder)
+
+__all__ = [
+    "CAT_BWD", "CAT_CHECKPOINT", "CAT_CONTROLLER", "CAT_DECODE",
+    "CAT_ENCODE", "CAT_FWD", "CAT_MIGRATION", "CAT_TRANSFER", "CATEGORIES",
+    "CLOCK_SIM", "CLOCK_WALL", "CalibrationRecord", "CandidateScore",
+    "Counter", "DetectorRecord", "EpochFlightRecord", "FlightRecorder",
+    "Gauge", "Histogram", "MetricsRegistry", "MetricsTelemetrySink",
+    "ReplanRecord", "StructuredLogger", "TelemetryBus", "TraceEvent",
+    "TraceRecorder", "add_logging_args", "events_from_dicts", "get_logger",
+    "read_jsonl", "to_trace_events", "validate_trace_events",
+    "write_chrome_trace", "write_jsonl",
+]

@@ -98,3 +98,27 @@ def test_cli_exit_codes(tmp_path):
     small_p.write_text(json.dumps({"result": small}))
     assert main([str(small_p), str(base_p)]) == 0
     assert main([str(small_p), str(base_p), "--max-regress", "0.05"]) == 1
+
+
+def test_write_baseline_round_trip(tmp_path):
+    """--write-baseline refreshes the committed file from a fresh artifact:
+    the rewritten baseline gates the producing run cleanly and drops scalar
+    annotations that are not per-system metric maps."""
+    new_p = tmp_path / "new.json"
+    payload = dict(_base())
+    payload["wall_seconds"] = 12.0          # harness annotation, not a system
+    new_p.write_text(json.dumps({"result": payload}))
+    base_p = tmp_path / "base.json"
+    assert main([str(new_p), str(base_p), "--write-baseline"]) == 0
+    refreshed = load_result(str(base_p))
+    assert "wall_seconds" not in refreshed
+    assert compare(_base(), refreshed) == []
+    assert main([str(new_p), str(base_p)]) == 0
+
+
+def test_committed_baseline_separates_joint_from_opfence():
+    """The refreshed baseline is pinned on a profile where co-planning
+    actually matters: the blind pipeline's pace is strictly worse."""
+    base = load_result(BASELINE)
+    assert base["opfence"]["pace"] > 1.5 * base["joint"]["pace"], base
+    assert base["joint"]["phi"] > base["opfence"]["phi"], base

@@ -1,0 +1,378 @@
+"""Observability layer: span recorder determinism, Perfetto export schema,
+JSONL round-trips, the telemetry bus parity guarantee, metrics registry,
+structured logging, the run report, and the flight-recorder acceptance on
+the closed-loop slowlink scenario — including the pinned invariant that
+tracing never changes simulated numerics."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import network
+from repro.core.executor import (LinkTiming, StepTiming, TelemetrySink,
+                                 simulate_iteration)
+from repro.core.scheduler import schedule_opfence
+from repro.elastic import ChurnEvent, ChurnTrace, ElasticController, TelemetryLog
+from repro.obs import (FlightRecorder, MetricsRegistry, MetricsTelemetrySink,
+                       TelemetryBus, TraceRecorder)
+from repro.obs import export as obs_export
+from repro.obs import report as obs_report
+from repro.obs import slog
+from repro.obs.record import CandidateScore, ReplanRecord, links_to_str
+from repro.obs.trace import (CAT_BWD, CAT_DECODE, CAT_FWD, CAT_TRANSFER,
+                             CLOCK_SIM, CLOCK_WALL)
+from helpers import mlp_chain
+
+
+def _sim_setup(n_layers=6, d=32, batch=4):
+    g, shapes, params, inputs = mlp_chain(n_layers=n_layers, d=d, batch=batch)
+    prof = g.annotate(shapes)
+    cluster = network.homogeneous_lan(n=4)
+    sch = schedule_opfence(g, prof, cluster)
+    return g, prof, cluster, sch
+
+
+# ----------------------------------------------------------- trace recorder
+def test_sim_span_ordering_deterministic():
+    """Two identical simulations produce byte-identical event lists: events()
+    sorts by (clock, ts, seq) and sim seq numbers are assigned in the same
+    deterministic program order."""
+    g, prof, cluster, sch = _sim_setup()
+    lists = []
+    for _ in range(2):
+        tr = TraceRecorder()
+        simulate_iteration(g, prof, sch, cluster, n_micro=2, trace=tr)
+        lists.append(tr.events())
+    assert lists[0] == lists[1]
+    assert lists[0], "simulation emitted no spans"
+    # sorted by ts within the sim clock, ties broken by seq
+    sim = [e for e in lists[0] if e.clock == CLOCK_SIM]
+    keys = [(e.ts, e.seq) for e in sim]
+    assert keys == sorted(keys)
+    cats = {e.cat for e in sim}
+    assert {CAT_FWD, CAT_BWD, CAT_TRANSFER} <= cats
+
+
+def test_recorder_disabled_is_noop_and_ring_bounds():
+    off = TraceRecorder(enabled=False)
+    off.span(CAT_FWD, "F0", "dev0", 0.0, 1.0)
+    off.instant(CAT_DECODE, "x", "dev0", t=0.5)
+    with off.region(CAT_FWD, "r", "dev0"):
+        pass
+    assert off.events() == []
+    assert off.n_dropped == 0
+    ring = TraceRecorder(capacity=4)
+    for i in range(10):
+        ring.span(CAT_FWD, f"F{i}", "dev0", float(i), float(i) + 0.5)
+    evs = ring.events()
+    assert len(evs) == 4
+    assert ring.n_dropped == 6
+    assert [e.name for e in evs] == ["F6", "F7", "F8", "F9"]
+
+
+def test_traced_simulation_bit_identical_to_untraced():
+    """Tracing is observation only: every SimResult field is equal (==, not
+    approx) with the recorder on, off, or absent."""
+    g, prof, cluster, sch = _sim_setup()
+    base = simulate_iteration(g, prof, sch, cluster, n_micro=3)
+    traced = simulate_iteration(g, prof, sch, cluster, n_micro=3,
+                                trace=TraceRecorder())
+    disabled = simulate_iteration(g, prof, sch, cluster, n_micro=3,
+                                  trace=TraceRecorder(enabled=False))
+    for other in (traced, disabled):
+        assert dataclasses.asdict(other) == dataclasses.asdict(base)
+
+
+def test_replay_shifts_and_stamps():
+    tr = TraceRecorder()
+    tr.span(CAT_FWD, "F0", "dev0", 0.0, 1.0, args={"stage": 0})
+    cached = tuple(tr.events())
+    sink = TraceRecorder()
+    sink.replay(cached, dt=10.0, extra_args={"step": 7})
+    sink.replay(cached, dt=20.0, extra_args={"step": 8})
+    evs = sink.events()
+    assert [e.ts for e in evs] == [10.0, 20.0]
+    assert [e.args["step"] for e in evs] == [7, 8]
+    assert all(e.args["stage"] == 0 for e in evs)
+
+
+# ------------------------------------------------------------ export schema
+def test_chrome_trace_schema_valid_and_violations_caught():
+    g, prof, cluster, sch = _sim_setup()
+    tr = TraceRecorder()
+    simulate_iteration(g, prof, sch, cluster, n_micro=2, trace=tr)
+    tr.instant(CAT_DECODE, "decode", "dev0", t=0.0, clock=CLOCK_SIM)
+    out = obs_export.to_trace_events(tr)
+    assert obs_export.validate_trace_events(out) == []
+    # every emitted record satisfies the trace_event contract directly
+    for ev in out:
+        assert ev["ph"] in ("X", "i", "M")
+        if ev["ph"] == "M":
+            continue
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0.0
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0.0
+    # sim and wall clocks export as distinct Perfetto processes
+    pids = {ev["pid"] for ev in out if ev["ph"] != "M"}
+    assert len(pids) >= 1
+    # corruptions are reported, not silently passed
+    bad = [dict(ev) for ev in out]
+    bad[0] = {"name": "broken"}                       # missing ph/pid/tid/ts
+    assert obs_export.validate_trace_events(bad)
+    assert obs_export.validate_trace_events([]) != []  # empty trace = broken
+
+
+def test_jsonl_round_trip_lossless(tmp_path):
+    g, prof, cluster, sch = _sim_setup()
+    tr = TraceRecorder()
+    simulate_iteration(g, prof, sch, cluster, n_micro=2, trace=tr)
+    path = str(tmp_path / "trace.jsonl")
+    n = obs_export.write_jsonl(tr, path)
+    back = obs_export.events_from_dicts(obs_export.read_jsonl(path))
+    assert n == len(tr.events())
+    assert back == tr.events()
+    # chrome export of the round-tripped events still validates
+    chrome = str(tmp_path / "trace.json")
+    obs_export.write_chrome_trace(back, chrome)
+    assert obs_export.validate_trace_events(
+        obs_export.load_trace_file(chrome)) == []
+    assert obs_export.main(["--validate", chrome]) == 0
+
+
+# ------------------------------------------------------------- bus parity
+def test_telemetry_bus_parity_with_direct_feed():
+    """A TelemetryLog fed through the bus equals one fed directly, bit for
+    bit — subscribing the log to the bus cannot perturb the closed loop."""
+    g, prof, cluster, sch = _sim_setup()
+    sink = TelemetrySink()
+    simulate_iteration(g, prof, sch, cluster, n_micro=2, telemetry=sink)
+    direct = TelemetryLog(window=5)
+    bused = TelemetryLog(window=5)
+    bus = TelemetryBus([bused])
+    for step in range(4):
+        direct.record_step(sink.samples, step)
+        direct.record_link_step(sink.link_samples, step)
+        bus.record_step(sink.samples, step)
+        bus.record_link_step(sink.link_samples, step)
+    assert bused.node_step_times() == direct.node_step_times()
+    assert bused.link_samples(min_steps=3) == direct.link_samples(min_steps=3)
+    assert bused.n_samples == direct.n_samples
+    assert bused.latest_step() == direct.latest_step() == 3
+
+
+def test_bus_fans_out_to_metrics_sink():
+    metrics = MetricsRegistry()
+    bus = TelemetryBus([MetricsTelemetrySink(metrics)])
+    bus.record(StepTiming(node=3, stage=0, micro_batch=0, backward=False,
+                          compute_seconds=0.5, comm_seconds=0.25, step=0))
+    bus.record_link(LinkTiming(src=0, dst=1, nbytes=1e6, seconds=0.125,
+                               step=0))
+    snap = metrics.snapshot()
+    assert snap["stage_compute_seconds{node=3}"] == pytest.approx(0.5)
+    assert snap["stage_comm_seconds{node=3}"] == pytest.approx(0.25)
+    assert snap["wire_bytes{link=0->1}"] == pytest.approx(1e6)
+    assert snap["link_seconds{link=0->1}"] == pytest.approx(0.125)
+
+
+# ---------------------------------------------------------------- metrics
+def test_metrics_registry_counters_gauges_histograms():
+    m = MetricsRegistry()
+    m.counter("steps").inc()
+    m.counter("steps").inc(2)
+    m.gauge("pace", plan="joint").set(1.5)
+    h = m.histogram("step_seconds")
+    for v in (1.0, 2.0, 4.0):
+        h.observe(v)
+    assert m.counter("steps").value == 3
+    assert h.count == 3 and h.total == pytest.approx(7.0)
+    assert h.min == 1.0 and h.max == 4.0 and h.mean == pytest.approx(7 / 3)
+    snap = m.snapshot()
+    assert snap["steps"] == 3
+    assert snap["pace{plan=joint}"] == 1.5
+    # same (name, labels) -> same instrument instance
+    assert m.counter("steps") is m.counter("steps")
+    assert m.gauge("pace", plan="joint") is not m.gauge("pace", plan="full")
+
+
+# ------------------------------------------------------- structured logging
+def test_structured_logging_levels_and_metric_mirror(capsys):
+    metrics = MetricsRegistry()
+    slog.configure("info")
+    log = slog.get_logger("test", metrics=metrics)
+    log.debug("hidden", x=1)
+    log.event("step_done", seconds=0.5, mode="joint")
+    err = capsys.readouterr().err
+    assert "hidden" not in err
+    assert "step_done" in err and "seconds=0.5" in err and "mode=joint" in err
+    assert metrics.snapshot()["step_done{field=seconds}"] == 0.5
+    slog.configure("quiet")
+    log.event("silenced", y=2)
+    assert "silenced" not in capsys.readouterr().err
+    log.warn("still_shown")
+    assert "still_shown" in capsys.readouterr().err
+    slog.configure("info")
+
+
+def test_logging_args_round_trip():
+    import argparse
+    ap = argparse.ArgumentParser()
+    slog.add_logging_args(ap)
+    assert slog.level_from_args(ap.parse_args([])) == "info"
+    assert slog.level_from_args(ap.parse_args(["--quiet"])) == "warning"
+    assert slog.level_from_args(
+        ap.parse_args(["--log-level", "debug"])) == "debug"
+
+
+# ------------------------------------------------------------------ report
+def test_overlap_fraction_interval_math():
+    tr = TraceRecorder()
+    tr.span(CAT_FWD, "F0", "dev0", 0.0, 2.0)
+    tr.span(CAT_TRANSFER, "x0", "link 0->1", 1.0, 3.0)   # 1s of 2s hidden
+    assert obs_report.overlap_fraction(tr.events()) == pytest.approx(0.5)
+    empty = TraceRecorder()
+    empty.span(CAT_FWD, "F0", "dev0", 0.0, 1.0)
+    assert obs_report.overlap_fraction(empty.events()) is None
+
+
+def test_report_renders_from_jsonl_round_trip(tmp_path):
+    g, prof, cluster, sch = _sim_setup()
+    tr = TraceRecorder()
+    sim = simulate_iteration(g, prof, sch, cluster, n_micro=2,
+                             trace=TraceRecorder())
+    per_step = TraceRecorder()
+    simulate_iteration(g, prof, sch, cluster, n_micro=2, trace=per_step)
+    for step in range(3):
+        tr.replay(tuple(per_step.events()), dt=step * sim.iteration_time,
+                  extra_args={"step": step})
+    trace_path = str(tmp_path / "t.jsonl")
+    obs_export.write_jsonl(tr, trace_path)
+    flight = FlightRecorder()
+    flight.log(ReplanRecord(
+        step=2, clock=1.0, cause="straggler", reason="detector flagged",
+        dead=[], joined=[],
+        candidates=[CandidateScore("keep", 1.0, 0.0, 0.0, 30.0),
+                    CandidateScore("full", 0.8, 2e6, 1.0, 25.0, winner=True)],
+        winner="full"))
+    flight_path = str(tmp_path / "f.jsonl")
+    flight.to_jsonl(flight_path)
+    events = obs_export.events_from_dicts(obs_export.read_jsonl(trace_path))
+    from repro.obs.record import read_jsonl as read_flight
+    rep = obs_report.build_report(events, read_flight(flight_path), width=60)
+    assert "comm/compute overlap" in rep
+    assert "% of wire seconds overlapped" in rep
+    assert "straggler heatmap" in rep and "steps 0..2" in rep
+    assert "cause=straggler" in rep and "full*" in rep and "keep(" in rep
+    tracks, steps, matrix = obs_report.straggler_matrix(events)
+    assert steps == [0, 1, 2]
+    assert len(tracks) == len(sch.stage_devices())
+    # CLI wrapper over the same pure renderers
+    assert obs_report.main([trace_path, "--flight", flight_path,
+                            "--width", "60"]) == 0
+
+
+def test_links_to_str_keys():
+    assert links_to_str({(0, 1): 2.0, (3, 2): 1.0}) \
+        == {"0->1": 2.0, "3->2": 1.0}
+
+
+# ------------------------------------------- flight recorder closed loop --
+@pytest.fixture(scope="module")
+def slowlink_runs():
+    """The closed-loop slowlink scenario (see test_closed_loop) run twice:
+    once fully instrumented, once bare — shared by the acceptance asserts."""
+    from test_closed_loop import _fat_pipe_victim, _setup
+    g, prof, cluster = _setup()
+    common = dict(n_micro=2, planner="joint", joint_ratio=64.0,
+                  detector_threshold=20.0, calibrate_min_samples=3,
+                  replan_pace_margin=0.2, calibrate_interval=3)
+    probe = ElasticController(g, prof, cluster, ChurnTrace(()), **common)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    victim = _fat_pipe_victim(probe, cluster)
+    churn = ChurnTrace((ChurnEvent(time=4.0 * t1, kind="slowlink",
+                                   node=victim, factor=0.5),))
+    tracer, flight, metrics = (TraceRecorder(), FlightRecorder(),
+                               MetricsRegistry())
+    ctrl = ElasticController(g, prof, cluster, churn, tracer=tracer,
+                             flight=flight, metrics=metrics, **common)
+    res = ctrl.run(steps=30)
+    bare = ElasticController(g, prof, cluster, churn, **common)
+    bare_res = bare.run(steps=30)
+    return dict(ctrl=ctrl, res=res, tracer=tracer, flight=flight,
+                metrics=metrics, bare=bare, bare_res=bare_res)
+
+
+def test_tracing_does_not_change_sim_metrics(slowlink_runs):
+    """Acceptance: the instrumented run is bit-identical in simulated
+    metrics to the uninstrumented one."""
+    res, bare = slowlink_runs["res"], slowlink_runs["bare_res"]
+    assert [s.step_seconds for s in res.steps] \
+        == [s.step_seconds for s in bare.steps]
+    assert [s.clock for s in res.steps] == [s.clock for s in bare.steps]
+    assert [e.cause for e in res.epochs] == [e.cause for e in bare.epochs]
+    assert res.total_seconds == bare.total_seconds
+    assert slowlink_runs["ctrl"].link_corrections \
+        == slowlink_runs["bare"].link_corrections
+
+
+def test_flight_recorder_explains_slowlink_recovery(slowlink_runs):
+    """The decision log alone reconstructs the recovery: the ≈2.0 fit with
+    'adopted' verdicts, the calibration re-plan trigger, and the candidate
+    scores (keep included) that picked the installed winner."""
+    flight, res = slowlink_runs["flight"], slowlink_runs["res"]
+    cals = flight.records("calibration")
+    assert cals, "no calibration records"
+    adopted = [c for c in cals if "adopted" in c.verdicts.values()]
+    assert adopted, "no adopted correction in the log"
+    for c in adopted:
+        for link, verdict in c.verdicts.items():
+            if verdict == "adopted":
+                assert c.fitted[link] == pytest.approx(2.0, rel=0.15)
+                assert c.installed[link] == pytest.approx(2.0, rel=0.15)
+    trigger = [c for c in cals if c.diverged]
+    assert trigger, "no calibration record flagged pace divergence"
+    assert trigger[0].calibrated_pace > trigger[0].installed_pace
+    replans = flight.records("replan")
+    cal_rp = [r for r in replans if r.cause == "calibration"]
+    assert cal_rp, "no calibration re-plan recorded"
+    rp = cal_rp[0]
+    assert "diverged" in rp.reason
+    names = [c.name for c in rp.candidates]
+    assert "keep" in names and len(names) >= 2
+    winners = [c for c in rp.candidates if c.winner]
+    assert len(winners) == 1 and winners[0].name == rp.winner
+    assert winners[0].score == min(c.score for c in rp.candidates)
+    assert rp.winner in [e.replan_mode for e in flight.records("epoch")] \
+        or rp.plan_only
+    assert "calibration" in [e.cause for e in res.epochs]
+    # the log round-trips and renders
+    assert "adopted" in obs_report.render_flight(flight.to_dicts())
+
+
+def test_controller_trace_is_schema_valid_and_stamped(slowlink_runs):
+    tracer = slowlink_runs["tracer"]
+    out = obs_export.to_trace_events(tracer)
+    assert obs_export.validate_trace_events(out) == []
+    evs = tracer.events()
+    steps = {e.args.get("step") for e in evs
+             if e.clock == CLOCK_SIM and e.phase == "X"
+             and e.cat in (CAT_FWD, CAT_BWD)}
+    assert len(steps) > 10, "per-step replay did not stamp compute spans"
+    assert any(e.cat == "controller" and e.name.startswith("replan:")
+               for e in evs)
+    assert any(e.cat == "controller" and e.name == "calibration"
+               for e in evs)
+    ov = obs_report.overlap_fraction(evs)
+    assert ov is not None and 0.0 <= ov <= 1.0
+
+
+def test_controller_metrics_snapshot(slowlink_runs):
+    snap = slowlink_runs["metrics"].snapshot()
+    assert snap.get("replan_count{cause=initial}") == 1
+    assert snap.get("replan_count{cause=calibration}", 0) >= 1
+    assert snap.get("calibration_fits", 0) >= 1
+    assert any(k.startswith("link_correction{") for k in snap)
+    assert any(k.startswith("stage_compute_seconds{") for k in snap)
+    hist = slowlink_runs["metrics"].histogram("step_seconds")
+    assert hist.count == len(slowlink_runs["res"].steps)
