@@ -45,11 +45,19 @@ from typing import Dict, List, Mapping
 TRACKED = {"pace": -1, "phi": +1}
 
 
-def load_result(path: str) -> Dict:
+def load_result(path: str, validate: bool = True) -> Dict:
     """Read a BENCH json; accepts the harness envelope ({"result": ...}) or
-    a bare result mapping."""
+    a bare result mapping.
+
+    ``validate=True`` (default) runs the payload through the
+    ``repro.check`` bench schema first — a hand-edited or truncated
+    baseline raises :class:`repro.check.BaselineCheckError` instead of
+    silently making the perf gate vacuous."""
     with open(path) as f:
         payload = json.load(f)
+    if validate:
+        from repro.check.bench import verify_bench_result
+        verify_bench_result(payload, tracked=tuple(TRACKED), source=path)
     return payload.get("result", payload) if isinstance(payload, dict) \
         else payload
 

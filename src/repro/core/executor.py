@@ -455,7 +455,8 @@ def simulate_migration(transfers: Mapping[Tuple[Optional[int], int], float],
         else:
             lk = cluster.link(src, dst)
             src_key = src
-        t = lk.alpha + lk.beta * float(nbytes) / bandwidth_fraction
+        # throttled stream = same α–β link carrying the scaled-up payload
+        t = lk.time(float(nbytes) / bandwidth_fraction)
         start = max(up_free.get(src_key, 0.0), down_free.get(dst, 0.0))
         end = start + t
         up_free[src_key] = end

@@ -21,6 +21,8 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 import jax
 import numpy as np
 
+from repro.check.errors import Finding, GraphCheckError
+
 Shape = Tuple[int, ...]
 
 
@@ -112,12 +114,20 @@ class OpGraph:
 
     # ------------------------------------------------------------- building
     def add(self, node: OpNode) -> OpNode:
+        findings = []
         if node.name in self.nodes:
-            raise ValueError(f"duplicate op name {node.name!r}")
+            findings.append(Finding(
+                "duplicate-op", node.name,
+                f"duplicate op name {node.name!r} in graph {self.name!r}"))
         for a in node.args:
             if a not in self.nodes:
-                raise ValueError(f"op {node.name!r} arg {a!r} not yet defined "
-                                 "(add producers before consumers)")
+                findings.append(Finding(
+                    "dangling-dep", node.name,
+                    f"op {node.name!r} arg {a!r} not yet defined "
+                    "(add producers before consumers)"))
+        if findings:
+            raise GraphCheckError(
+                f"cannot add op {node.name!r}", findings=findings)
         self.nodes[node.name] = node
         return node
 
@@ -276,6 +286,15 @@ class SubDag:
 
     def __post_init__(self):
         self.node_set = set(self.node_names)
+        if len(self.node_set) != len(self.node_names):
+            seen: set = set()
+            dup = next(n for n in self.node_names
+                       if n in seen or seen.add(n))
+            raise GraphCheckError(
+                f"sub-DAG {self.index} is malformed",
+                findings=[Finding(
+                    "duplicate-op", dup,
+                    f"op {dup!r} listed twice in sub-DAG {self.index}")])
 
 
 def build_subdags(graph: OpGraph, assignment: Sequence[Sequence[str]]) -> List[SubDag]:
@@ -286,16 +305,26 @@ def build_subdags(graph: OpGraph, assignment: Sequence[Sequence[str]]) -> List[S
     (paper puts Input on CompNode 1 and Label/CE on the last one).
     """
     owner: Dict[str, int] = {}
+    findings = []
     for k, names in enumerate(assignment):
         for n in names:
             if n in owner:
-                raise ValueError(f"op {n!r} assigned twice")
-            if n not in graph:
-                raise ValueError(f"unknown op {n!r}")
+                findings.append(Finding(
+                    "double-assignment", n,
+                    f"op {n!r} assigned to sub-DAGs {owner[n]} and {k}"))
+            elif n not in graph:
+                findings.append(Finding(
+                    "unknown-op", n,
+                    f"op {n!r} on sub-DAG {k} is absent from the graph"))
             owner[n] = k
-    missing = set(graph.nodes) - set(owner)
-    if missing:
-        raise ValueError(f"ops not assigned: {sorted(missing)}")
+    for n in graph.nodes:
+        if n not in owner:
+            findings.append(Finding(
+                "unassigned-op", n,
+                f"op {n!r} is assigned to no sub-DAG"))
+    if findings:
+        raise GraphCheckError("partition does not cover the OP-DAG",
+                              findings=findings)
 
     subdags = [SubDag(index=k, node_names=list(names))
                for k, names in enumerate(assignment)]

@@ -229,6 +229,7 @@ def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
                      cluster: ClusterSpec, seed: int = 0,
                      cost_model: Optional[EdgeCostModel] = None,
                      device_subset: Optional[Sequence[int]] = None,
+                     verify: bool = True,
                      ) -> Schedule:
     """The OP-Fence scheduler.
 
@@ -241,6 +242,12 @@ def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
     ``device_subset`` restricts placement to the listed CompNodes (the elastic
     runtime re-plans on the survivors after churn); the returned Schedule
     still spans the full device index space, with excluded CompNodes empty.
+
+    ``verify=True`` (default) runs the emitted schedule through the
+    :mod:`repro.check` static verifier (coverage, contiguity, subset
+    membership) and raises :class:`repro.check.ScheduleCheckError` on any
+    violation — a planner bug must surface here, not as a silently wrong
+    pace downstream.  ``verify=False`` opts out (hot inner loops).
     """
     bw = cluster.bandwidth_matrix()
     subset = _resolve_subset(cluster, device_subset)
@@ -264,8 +271,14 @@ def schedule_opfence(graph: OpGraph, profiles: Mapping[str, OpProfile],
                                           device_order,
                                           cost_model=cost_model)
     a, s = _to_full_assignment(segs, device_order, len(cluster))
-    return Schedule(assignment=a, stages=s,
-                    clusters=[clusters[c] for c in order], predicted_pace=pace)
+    sched = Schedule(assignment=a, stages=s,
+                     clusters=[clusters[c] for c in order],
+                     predicted_pace=pace)
+    if verify:
+        from repro.check.schedule import verify_schedule
+        verify_schedule(graph, sched, profiles=profiles, cluster=cluster,
+                        alive=subset, check_capacity=False)
+    return sched
 
 
 # ---------------------------------------------------- joint co-planning ----
@@ -288,7 +301,8 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
                    encoding: str = "paper", seed: int = 0,
                    device_subset: Optional[Sequence[int]] = None,
                    max_rounds: int = 4,
-                   cost_model: Optional[EdgeCostModel] = None) -> JointPlan:
+                   cost_model: Optional[EdgeCostModel] = None,
+                   verify: bool = True) -> JointPlan:
     """OP-Fence × AdaTopK fixed-point co-planner.
 
     The blind pipeline (schedule on dense bytes, then compress) is
@@ -308,13 +322,18 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
     carrying telemetry-calibrated link corrections so the closed planning
     loop co-plans against the links as *measured*, not as spec'd.  Its plan
     (if any) is stripped and it is rebased onto ``cluster``.
+
+    ``verify=True`` (default) statically verifies the *winning*
+    (schedule, plan) pair through :mod:`repro.check` — schedule coverage/
+    contiguity plus the AdaTopK break-even bounds; intermediate fixed-point
+    rounds are never verified (they are search states, not plans).
     """
     dense_model = (cost_model.with_cluster(cluster).with_plan(None)
                    if cost_model is not None
                    else EdgeCostModel(graph, profiles, cluster))
     sched = schedule_opfence(graph, profiles, cluster, seed=seed,
                              cost_model=dense_model,
-                             device_subset=device_subset)
+                             device_subset=device_subset, verify=False)
     best: Optional[JointPlan] = None
     seen_assignments = []
     converged = False
@@ -335,10 +354,19 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
             break                  # a re-cut now would never be scored
         sched = schedule_opfence(graph, profiles, cluster, seed=seed,
                                  cost_model=model,
-                                 device_subset=device_subset)
+                                 device_subset=device_subset, verify=False)
     best.converged = converged
     best.schedule = dataclasses.replace(
         best.schedule, predicted_pace=best.predicted_pace)
+    if verify:
+        from repro.check.costs import verify_plan
+        from repro.check.schedule import verify_schedule
+        verify_schedule(graph, best.schedule, profiles=profiles,
+                        cluster=cluster,
+                        alive=_resolve_subset(cluster, device_subset),
+                        check_capacity=False)
+        verify_plan(graph, profiles, best.plan,
+                    placement=best.schedule.placement)
     return best
 
 

@@ -230,7 +230,8 @@ class ElasticController:
                  initial_alive: Optional[Sequence[int]] = None,
                  tracer: Optional[TraceRecorder] = None,
                  flight: Optional[FlightRecorder] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 verify: bool = True):
         if migration_mode not in ("stop", "overlap"):
             raise ValueError(f"unknown migration_mode {migration_mode!r}")
         if planner not in ("opfence", "joint"):
@@ -270,6 +271,11 @@ class ElasticController:
         self.calibrate_hysteresis = float(calibrate_hysteresis)
         self.replan_pace_margin = float(replan_pace_margin)
         self.use_kernel = use_kernel
+        # static verification (repro.check) of every plan this controller
+        # installs: schedules at install time, re-plans inside replan(),
+        # compression plans against the installed placement.  verify=False
+        # opts the whole runtime out (perf sweeps).
+        self.verify = bool(verify)
         self._det_cfg = dict(alpha=detector_alpha,
                              threshold=detector_threshold,
                              min_observations=detector_min_obs)
@@ -361,6 +367,13 @@ class ElasticController:
         believed = self.believed_cluster()
         if schedule is not None:
             self.schedule = schedule
+            if self.verify:
+                # re-plans were verified inside replan(); this catches the
+                # other installers (interim schedules, caller-built ones)
+                from repro.check.schedule import verify_schedule
+                verify_schedule(self.graph, self.schedule,
+                                profiles=self.profiles, cluster=believed,
+                                check_capacity=False)
         elif migration is None:   # initial epoch: schedule from scratch
             if self.planner == "joint":
                 self.schedule = schedule_joint(
@@ -369,14 +382,20 @@ class ElasticController:
                     device_subset=self.membership.alive,
                     cost_model=EdgeCostModel(
                         self.graph, self.profiles, believed, None,
-                        self.link_corrections)).schedule
+                        self.link_corrections),
+                    verify=self.verify).schedule
             else:
                 self.schedule = schedule_opfence(
                     self.graph, self.profiles, believed, seed=self.seed,
-                    device_subset=self.membership.alive)
+                    device_subset=self.membership.alive,
+                    verify=self.verify)
         placement = self.schedule.placement
         self.plan = self.plan_factory(self.graph, self.profiles, believed,
                                       placement)
+        if self.verify:
+            from repro.check.costs import verify_plan
+            verify_plan(self.graph, self.profiles, self.plan,
+                        placement=placement)
         migrate_s = migration.seconds if migration is not None else 0.0
         if migrate_seconds is not None:   # caller-computed blocking cost
             migrate_s = migrate_seconds
@@ -803,8 +822,13 @@ class ElasticController:
                                tuple(span_rec.events()) if span_rec else ())
         _, sim_time, samples, link_samples, spans = self._obs_cache
         if tracing and spans:
+            # (step, epoch) identifies one execution attempt: after a
+            # rollback the same data step re-executes under the next epoch,
+            # and the happens-before checker must not pair spans across the
+            # two attempts
             self.tracer.replay(spans, dt=self.clock,
-                               extra_args={"step": step})
+                               extra_args={"step": step,
+                                           "epoch": len(self.epoch_records)})
         self.telemetry_bus.record_step(samples, step=step)
         if self._migrating is None:
             # link observations taken while a background stream contends on
@@ -1028,4 +1052,5 @@ class ElasticController:
                       cost_model=model, mode=self.replan_mode,
                       amortize_steps=self.amortize_steps,
                       pin_boundaries=self.pin_boundaries,
-                      planner=self.planner, joint_ratio=self.joint_ratio)
+                      planner=self.planner, joint_ratio=self.joint_ratio,
+                      verify=self.verify)

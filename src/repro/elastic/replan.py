@@ -354,8 +354,8 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
            cost_model: Optional[EdgeCostModel] = None,
            mode: str = "auto", amortize_steps: float = 100.0,
            pin_boundaries: bool = False,
-           planner: str = "opfence", joint_ratio: float = 100.0
-           ) -> ReplanResult:
+           planner: str = "opfence", joint_ratio: float = 100.0,
+           verify: bool = True) -> ReplanResult:
     """Incremental re-scheduling with a migration-aware candidate choice.
 
     Two candidates: ``full`` re-runs OP-Fence from scratch on the survivors
@@ -435,11 +435,12 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
         if planner == "joint":
             candidates["full"] = schedule_joint(
                 graph, profiles, cluster, ratio=joint_ratio, seed=seed,
-                device_subset=alive, cost_model=cost_model).schedule
+                device_subset=alive, cost_model=cost_model,
+                verify=False).schedule
         else:
             candidates["full"] = schedule_opfence(
                 graph, profiles, cluster, seed=seed,
-                cost_model=cost_model, device_subset=alive)
+                cost_model=cost_model, device_subset=alive, verify=False)
     if not candidates:
         raise RuntimeError("no feasible re-plan candidate")
 
@@ -462,8 +463,21 @@ def replan(graph: OpGraph, profiles: Mapping[str, OpProfile],
     _, name, sched, moves, sim = best
     for s in scores:
         s["winner"] = s["name"] == name
-    return ReplanResult(schedule=sched,
-                        migration=MigrationPlan(moves=moves, sim=sim),
-                        alive=sorted(int(a) for a in alive),
-                        dead=sorted(int(d) for d in dead), mode=name,
-                        scores=scores)
+    result = ReplanResult(schedule=sched,
+                          migration=MigrationPlan(moves=moves, sim=sim),
+                          alive=sorted(int(a) for a in alive),
+                          dead=sorted(int(d) for d in dead), mode=name,
+                          scores=scores)
+    if verify:
+        # static audit of the WINNING candidate only — the whole re-plan,
+        # not each search state — so a diff/migration bug is rejected
+        # before the controller ever installs it
+        from repro.check.elastic import verify_replan
+        communities = None
+        if pin_boundaries:
+            communities = _extend_communities(
+                cluster, _communities_for(cluster, old_schedule), joined)
+        verify_replan(graph, profiles, result, old_schedule,
+                      cluster=cluster, opt_state_mult=opt_state_mult,
+                      pinned=pin_boundaries, communities=communities)
+    return result

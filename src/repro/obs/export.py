@@ -174,17 +174,34 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--validate", action="store_true",
                     help="schema-check the artifact; non-zero exit on "
                          "violations")
+    ap.add_argument("--check-order", action="store_true",
+                    help="additionally run the repro.check happens-before "
+                         "checker (overlapping sends, compute before "
+                         "inbound transfer)")
     args = ap.parse_args(argv)
     events = load_trace_file(args.path)
     errors = validate_trace_events(events)
-    if args.validate:
-        if errors:
-            print(f"{args.path}: INVALID ({len(errors)} violations)",
+    order_errors: List[str] = []
+    if args.check_order:
+        # function-local import: repro.obs stays stdlib-only importable;
+        # the happens-before pass is the check layer's
+        from repro.check.traceorder import (check_trace_order,
+                                            load_trace_events)
+        order_errors = [str(f)
+                        for f in check_trace_order(load_trace_events(
+                            args.path))
+                        if f.severity == "error"]
+    if args.validate or args.check_order:
+        bad = errors + order_errors
+        if bad:
+            print(f"{args.path}: INVALID ({len(bad)} violations)",
                   file=sys.stderr)
-            for e in errors[:20]:
+            for e in bad[:20]:
                 print(f"  - {e}", file=sys.stderr)
             return 1
-        print(f"{args.path}: OK ({len(events)} trace events, schema valid)")
+        ordered = ", happens-before ok" if args.check_order else ""
+        print(f"{args.path}: OK ({len(events)} trace events, schema valid"
+              f"{ordered})")
         return 0
     print(f"{len(events)} trace events, {len(errors)} violations")
     return 0

@@ -1,0 +1,428 @@
+"""Static plan-verifier (repro.check): mutation-kill coverage.
+
+Every mutation class the ISSUE names — cycle, orphan op,
+double-assignment, capacity blow-out, past-break-even ratio,
+non-conserving move-set — must be rejected with a typed, op-naming
+error; every artifact the repo actually commits (configs, baselines,
+executor traces) must pass clean.  Property tests (hypothesis) are
+skipped individually when hypothesis is absent, per repo convention."""
+import copy
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:              # tier-1 image has no hypothesis: property
+    def given(*args, **kwargs):  # tests skip, everything else still runs
+        def deco(fn):
+            return pytest.mark.skip(reason="needs hypothesis")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _NullStrategies:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
+
+from repro.check import (BaselineCheckError, CompressionCheckError,
+                         GraphCheckError, ScheduleCheckError,
+                         TraceOrderError, check_bench_result, check_graph,
+                         check_moves, check_schedule, check_trace_order,
+                         verify_plan, verify_replan, verify_schedule,
+                         verify_trace)
+from repro.check.__main__ import check_config
+from repro.check.costs import check_cost_model
+from repro.check.lint import lint_source
+from repro.configs import ARCH_IDS
+from repro.core import network
+from repro.core.compression import encoding_break_even, plan_adatopk
+from repro.core.costmodel import EdgeCostModel
+from repro.core.estimator import ClusterSpec
+from repro.core.executor import simulate_iteration
+from repro.core.opgraph import OpGraph, OpNode, OpType, build_subdags
+from repro.core.scheduler import schedule_opfence
+from repro.elastic.replan import replan
+from repro.obs.trace import TraceRecorder
+from helpers import mlp_chain
+
+
+def _toy(n_layers=8, n_dev=6):
+    g, shapes, _, _ = mlp_chain(n_layers=n_layers, d=16)
+    prof = g.annotate(shapes)
+    cluster = network.geo_random(n_dev, n_sites=2, seed=0)
+    sched = schedule_opfence(g, prof, cluster)
+    return g, shapes, prof, cluster, sched
+
+
+# --------------------------------------------------- typed IR construction --
+def test_opgraph_add_names_duplicate_op():
+    g = OpGraph()
+    g.add(OpNode("a", OpType.PLACEHOLDER))
+    with pytest.raises(GraphCheckError) as ei:
+        g.add(OpNode("a", OpType.PLACEHOLDER))
+    assert "duplicate-op" in ei.value.codes
+    assert ei.value.findings[0].where == "a"
+    assert isinstance(ei.value, ValueError)   # legacy catch sites unbroken
+
+
+def test_opgraph_add_names_dangling_dep():
+    g = OpGraph()
+    with pytest.raises(GraphCheckError) as ei:
+        g.add(OpNode("b", OpType.NON_PARAMETRIC, args=("ghost",)))
+    assert "dangling-dep" in ei.value.codes
+    assert ei.value.findings[0].where == "b"
+    assert "ghost" in str(ei.value)
+
+
+def test_build_subdags_typed_coverage_errors():
+    g, _, _, _, _ = _toy()
+    names = list(g.nodes)
+    with pytest.raises(GraphCheckError) as ei:
+        build_subdags(g, [names, names[:1]])      # l-th op assigned twice
+    assert "double-assignment" in ei.value.codes
+    with pytest.raises(GraphCheckError) as ei:
+        build_subdags(g, [names[:-1]])            # one op dropped
+    assert "unassigned-op" in ei.value.codes
+    assert ei.value.findings[0].where == names[-1]
+
+
+def test_subdag_rejects_duplicate_node_names():
+    from repro.core.opgraph import SubDag
+    with pytest.raises(GraphCheckError) as ei:
+        SubDag(index=3, node_names=["x", "y", "x"])
+    assert "duplicate-op" in ei.value.codes and \
+        ei.value.findings[0].where == "x"
+
+
+# ------------------------------------------------------------ graph checks --
+def test_check_graph_names_cycle_members():
+    g, _, _, _, _ = _toy(n_layers=4)
+    g.nodes["l0"].args = ("x", "l2")     # back edge: l0 <- l2 <- l1 <- l0
+    findings = check_graph(g)
+    codes = {f.code for f in findings}
+    assert "cycle" in codes
+    cyc = next(f for f in findings if f.code == "cycle")
+    assert "l0" in cyc.message and "l2" in cyc.message
+
+
+def test_check_graph_flags_op_unreachable_from_loss():
+    g, shapes, _, _, _ = _toy(n_layers=4)
+    g.add(OpNode("orphan", OpType.PARAMETRIC, args=("l3",),
+                 out_shape_fn=lambda s: s))     # trains nothing: no loss path
+    findings = check_graph(g, shapes)
+    bad = [f for f in findings if f.code == "unreachable-from-loss"]
+    assert [f.where for f in bad] == ["orphan"]
+    assert all(f.severity == "error" for f in bad)
+
+
+def test_check_graph_clean_on_valid_model():
+    g, shapes, prof, _, _ = _toy()
+    assert check_graph(g, shapes) == []
+    from repro.check import check_profiles
+    assert check_profiles(g, prof, shapes) == []
+
+
+# --------------------------------------------------------- schedule checks --
+def test_schedule_mutation_dropped_op_is_caught():
+    g, _, prof, cluster, sched = _toy()
+    mut = copy.deepcopy(sched)
+    d = mut.stage_devices()[0]
+    dropped = mut.assignment[d].pop()
+    with pytest.raises(ScheduleCheckError) as ei:
+        verify_schedule(g, mut, profiles=prof, cluster=cluster)
+    assert "unassigned-op" in ei.value.codes
+    assert any(f.where == dropped for f in ei.value.findings)
+
+
+def test_schedule_mutation_double_assignment_is_caught():
+    g, _, prof, cluster, sched = _toy()
+    mut = copy.deepcopy(sched)
+    devs = mut.stage_devices()
+    dup = mut.assignment[devs[0]][0]
+    mut.assignment[devs[-1]].append(dup)
+    with pytest.raises(ScheduleCheckError) as ei:
+        verify_schedule(g, mut, profiles=prof, cluster=cluster)
+    assert "double-assignment" in ei.value.codes
+    assert any(f.where == dup for f in ei.value.findings)
+
+
+def test_schedule_mutation_swapped_stages_is_caught():
+    g, _, prof, cluster, sched = _toy()
+    mut = copy.deepcopy(sched)
+    devs = mut.stage_devices()
+    a, b = devs[0], devs[-1]
+    mut.assignment[a], mut.assignment[b] = \
+        mut.assignment[b], mut.assignment[a]   # stage order now violates chain
+    findings = check_schedule(g, mut, profiles=prof, cluster=cluster)
+    assert any(f.code in ("stage-order", "non-contiguous-stage")
+               for f in findings)
+
+
+def test_schedule_capacity_blow_out_names_biggest_op():
+    g, _, prof, cluster, sched = _toy()
+    tiny = ClusterSpec(
+        [dataclasses.replace(d, mem_bytes=16.0) for d in cluster.devices],
+        cluster._links)
+    with pytest.raises(ScheduleCheckError) as ei:
+        verify_schedule(g, sched, profiles=prof, cluster=tiny)
+    assert "capacity" in ei.value.codes
+    cap = next(f for f in ei.value.findings if f.code == "capacity")
+    assert cap.where in g.nodes          # the dominating op is named
+
+
+def test_planner_output_passes_and_verify_flag_works():
+    g, _, prof, cluster, _ = _toy()
+    sched = schedule_opfence(g, prof, cluster, verify=True)
+    assert check_schedule(g, sched, profiles=prof, cluster=cluster) == []
+
+
+# ------------------------------------------- compression/cost-model checks --
+def test_adatopk_plan_passes_then_inflated_ratio_is_caught():
+    g, _, prof, cluster, sched = _toy()
+    plan = plan_adatopk(g, prof, cluster, sched.placement, 100.0)
+    verify_plan(g, prof, plan, placement=sched.placement)
+    assert plan.edge_ratio, "toy model must have at least one cross edge"
+    edge = next(iter(plan.edge_ratio))
+    be = encoding_break_even("paper", 4)
+    mut = dataclasses.replace(
+        plan, edge_ratio={**plan.edge_ratio, edge: be * 0.9})
+    with pytest.raises(CompressionCheckError) as ei:
+        verify_plan(g, prof, mut, placement=sched.placement)
+    assert "ratio-below-break-even" in ei.value.codes
+    assert any(f.where == f"{edge[0]}->{edge[1]}" for f in ei.value.findings)
+
+
+def test_compression_invalid_ratio_and_unknown_op():
+    g, _, prof, cluster, sched = _toy()
+    plan = plan_adatopk(g, prof, cluster, sched.placement, 100.0)
+    edge = next(iter(plan.edge_ratio))
+    bad = dataclasses.replace(plan, edge_ratio={edge: float("nan"),
+                                                ("ghost", "l1"): 8.0})
+    with pytest.raises(CompressionCheckError) as ei:
+        verify_plan(g, prof, bad)
+    assert {"ratio-invalid", "unknown-op"} <= set(ei.value.codes)
+
+
+def test_cost_model_parity_holds_and_clamp_violation_is_caught():
+    g, _, prof, cluster, sched = _toy()
+    plan = plan_adatopk(g, prof, cluster, sched.placement, 100.0)
+    model = EdgeCostModel(g, prof, cluster, plan)
+    assert check_cost_model(model, sched.placement) == []
+    rigged = EdgeCostModel(g, prof, cluster, plan,
+                           link_corrections={(0, 1): 80.0})
+    findings = check_cost_model(rigged, sched.placement)
+    assert any(f.code == "correction-out-of-clamp" for f in findings)
+
+
+# ------------------------------------------------------------ elastic checks --
+def _replan_scenario():
+    g, _, prof, cluster, sched = _toy(n_layers=10, n_dev=6)
+    dead = [sched.stage_devices()[0]]
+    alive = [d for d in range(len(cluster)) if d not in dead]
+    rp = replan(g, prof, cluster, sched, alive=alive, dead=dead)
+    return g, prof, cluster, sched, rp
+
+
+def test_replan_winner_passes_verification():
+    g, prof, cluster, sched, rp = _replan_scenario()
+    verify_replan(g, prof, rp, sched, cluster=cluster)
+
+
+def test_nonconserving_move_set_is_caught():
+    from repro.check import ElasticCheckError
+    g, prof, cluster, sched, rp = _replan_scenario()
+    moves = list(rp.migration.moves)
+    assert moves, "killing the first stage must move state"
+    # mutation 1: drop a move — parameters silently vanish
+    lost = moves[0]
+    findings = check_moves(sched, rp.schedule, prof, moves[1:],
+                           dead=rp.dead)
+    assert any(f.code == "missing-move" and f.where == lost.op
+               for f in findings)
+    # mutation 2: inflate the byte account — state no longer conserved
+    inflated = [dataclasses.replace(moves[0], nbytes=moves[0].nbytes + 1)] \
+        + moves[1:]
+    findings = check_moves(sched, rp.schedule, prof, inflated, dead=rp.dead)
+    assert any(f.code == "state-bytes-mismatch" and f.where == lost.op
+               for f in findings)
+    # mutation 3: reroute to the wrong destination
+    rerouted = [dataclasses.replace(moves[0], dst=moves[0].dst + 1)] \
+        + moves[1:]
+    findings = check_moves(sched, rp.schedule, prof, rerouted, dead=rp.dead)
+    assert any(f.code in ("wrong-destination", "phantom-move")
+               for f in findings)
+    # and the raising wrapper carries the typed error
+    mut = dataclasses.replace(rp, migration=dataclasses.replace(
+        rp.migration, moves=moves[1:]))
+    with pytest.raises(ElasticCheckError) as ei:
+        verify_replan(g, prof, mut, sched, cluster=cluster)
+    assert "missing-move" in ei.value.codes
+
+
+def test_score_table_winner_mismatch_is_caught():
+    g, prof, cluster, sched, rp = _replan_scenario()
+    mut = dataclasses.replace(rp, mode="keep" if rp.mode != "keep"
+                              else "full")
+    from repro.check import check_replan
+    found = check_replan(g, prof, mut, sched, cluster=cluster)
+    assert any(f.code == "score-winner-mismatch" for f in found)
+
+
+# --------------------------------------------------------- trace ordering --
+def test_simulated_iteration_trace_passes_happens_before():
+    g, _, prof, cluster, sched = _toy()
+    plan = plan_adatopk(g, prof, cluster, sched.placement, 100.0)
+    rec = TraceRecorder()
+    simulate_iteration(g, prof, sched, cluster, plan, n_micro=3, trace=rec)
+    findings = check_trace_order(rec.events())
+    assert [f for f in findings if f.severity == "error"] == []
+
+
+def test_trace_order_catches_overlapping_sends_on_one_link():
+    rec = TraceRecorder()
+    rec.span("link.transfer", "Fxfer.mb0", "link 0->1", 0.0, 2.0)
+    rec.span("link.transfer", "Fxfer.mb1", "link 0->1", 1.0, 3.0)  # overlap
+    rec.span("stage.fwd", "F1.mb0", "dev1", 2.0, 4.0)
+    rec.span("stage.fwd", "F1.mb1", "dev1", 4.0, 6.0)
+    findings = check_trace_order(rec.events())
+    assert any(f.code == "overlap" and f.where == "link 0->1"
+               for f in findings)
+
+
+def test_trace_order_catches_compute_before_inbound_transfer():
+    rec = TraceRecorder()
+    rec.span("link.transfer", "Fxfer.mb0", "link 0->1", 0.0, 5.0)
+    rec.span("stage.fwd", "F1.mb0", "dev1", 3.0, 6.0)   # starts mid-transfer
+    with pytest.raises(TraceOrderError) as ei:
+        verify_trace(rec.events())
+    assert "compute-before-transfer" in ei.value.codes
+    assert any("dev1" in f.where for f in ei.value.findings)
+
+
+def test_trace_order_catches_nonmonotonic_device_track():
+    rec = TraceRecorder()
+    rec.span("stage.fwd", "F0.mb1", "dev0", 5.0, 6.0)
+    rec.span("stage.fwd", "F0.mb0", "dev0", 0.0, 1.0)   # recorded later,
+    findings = check_trace_order(rec.events())          # starts earlier
+    assert any(f.code == "nonmonotonic-track" and f.where == "dev0"
+               for f in findings)
+
+
+def test_trace_order_jsonl_roundtrip(tmp_path):
+    from repro.obs.export import write_jsonl
+    g, _, prof, cluster, sched = _toy()
+    rec = TraceRecorder()
+    simulate_iteration(g, prof, sched, cluster, n_micro=2, trace=rec)
+    p = tmp_path / "t.jsonl"
+    write_jsonl(rec, str(p))
+    assert [f for f in verify_trace(str(p)) if f.severity == "error"] == []
+
+
+# -------------------------------------------------------- bench baselines --
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "BENCH_baseline_joint.json")
+
+
+def test_committed_baseline_passes_schema():
+    with open(BASELINE) as f:
+        payload = json.load(f)
+    assert check_bench_result(payload, source=BASELINE) == []
+
+
+def test_truncated_or_poisoned_baseline_fails_loudly(tmp_path):
+    from benchmarks.compare import load_result
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"result": {}}))
+    with pytest.raises(BaselineCheckError):
+        load_result(str(empty))
+    nan = tmp_path / "nan.json"
+    nan.write_text('{"result": {"joint": {"pace": NaN, "phi": 1.0}}}')
+    with pytest.raises(BaselineCheckError) as ei:
+        load_result(str(nan))
+    assert "non-finite-metric" in ei.value.codes
+    zero = tmp_path / "zero.json"
+    zero.write_text(json.dumps({"result": {"joint": {"pace": 0.0}}}))
+    with pytest.raises(BaselineCheckError) as ei:
+        load_result(str(zero))
+    assert "bad-tracked-metric" in ei.value.codes
+
+
+# ------------------------------------------------------------- custom lint --
+def test_lint_flags_raw_byte_math_and_wallclock():
+    findings = lint_source(
+        "def f(link, numel, x):\n"
+        "    import time\n"
+        "    t0 = time.time()\n"
+        "    return numel * x.itemsize + link.beta * numel\n",
+        "core/rogue.py")
+    codes = [f.code for f in findings]
+    assert codes.count("raw-byte-math") == 2
+    assert "wallclock-in-sim" in codes
+
+
+def test_lint_allows_sanctioned_modules_and_main_prints():
+    assert lint_source("k = numel * itemsize\n",
+                       "core/compression.py") == []
+    assert lint_source("def main():\n    print('ok')\n", "obs/x.py") == []
+    assert lint_source("print('no')\n", "obs/x.py") != []
+
+
+def test_live_tree_is_lint_clean():
+    from repro.check.lint import lint_tree
+    assert [str(f) for f in lint_tree()] == []
+
+
+# ------------------------------------------------------- committed configs --
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_committed_config_passes_full_sweep(arch):
+    findings = check_config(arch)
+    assert [str(f) for f in findings
+            if f.severity == "error"] == [], arch
+
+
+# ---------------------------------------------------------- property tests --
+@given(st.floats(min_value=1.001, max_value=2.999))
+@settings(max_examples=20, deadline=None)
+def test_property_any_subbreakeven_ratio_is_rejected(ratio):
+    g, _, prof, cluster, sched = _toy()
+    plan = plan_adatopk(g, prof, cluster, sched.placement, 100.0)
+    edge = next(iter(plan.edge_ratio))
+    mut = dataclasses.replace(plan,
+                              edge_ratio={**plan.edge_ratio, edge: ratio})
+    with pytest.raises(CompressionCheckError):
+        verify_plan(g, prof, mut, placement=sched.placement)
+
+
+@given(st.integers(min_value=0, max_value=7))
+@settings(max_examples=8, deadline=None)
+def test_property_dropping_any_op_is_caught(idx):
+    g, _, prof, cluster, sched = _toy(n_layers=8)
+    mut = copy.deepcopy(sched)
+    chain_ops = [op for d in mut.stage_devices() for op in mut.assignment[d]]
+    victim = chain_ops[idx % len(chain_ops)]
+    for d in mut.stage_devices():
+        if victim in mut.assignment[d]:
+            mut.assignment[d].remove(victim)
+    findings = check_schedule(g, mut)
+    assert any(f.code == "unassigned-op" and f.where == victim
+               for f in findings)
+
+
+@given(st.integers(min_value=1, max_value=10 ** 6))
+@settings(max_examples=20, deadline=None)
+def test_property_any_byte_skew_breaks_conservation(skew):
+    g, prof, cluster, sched, rp = _replan_scenario()
+    moves = list(rp.migration.moves)
+    mut = [dataclasses.replace(moves[0], nbytes=moves[0].nbytes + skew)] \
+        + moves[1:]
+    findings = check_moves(sched, rp.schedule, prof, mut, dead=rp.dead)
+    assert any(f.code == "state-bytes-mismatch" for f in findings)
