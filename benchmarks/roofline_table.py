@@ -1,6 +1,12 @@
 """§Roofline table (deliverable g): aggregates experiments/dryrun/*.json into
 the per-(arch × shape × mesh) roofline rows — three terms, dominant
-bottleneck, MODEL_FLOPS/HLO_FLOPs ratio — and emits CSV."""
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio — and emits CSV.
+
+Also carries the compression-pricing A/B (§6: the codec is a roofline term
+too): the same workload co-planned with the codec priced free (legacy)
+versus priced by calibrated :class:`KernelCostModel` entries — the sim's
+``compress_busy``, the overlap-discounted wall-clock delta, and how the
+planner's chosen ratios change once encode compute enters the cost model."""
 from __future__ import annotations
 
 import glob
@@ -10,6 +16,72 @@ from typing import Dict, List
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+
+
+def compression_ab(csv_writer, arch: str = "gpt2-xl", batch: int = 2,
+                   seq: int = 128, ratio: float = 64.0) -> Dict[str, Dict]:
+    """schedule_joint + simulate_iteration with the codec priced free vs
+    priced by a calibrated per-device KernelCostModel.
+
+    Three CSV rows: the free-codec baseline, the priced run (nonzero
+    ``compress_busy``, overlap-discounted delta = how much of the codec the
+    pipeline could NOT hide behind next-micro-batch compute), and a
+    slow-codec run where the profitability guard prunes the plan — the
+    chosen ratios visibly react to ``compress_seconds``."""
+    from repro.configs import resolve
+    from repro.core import EdgeCostModel, simulate_iteration
+    from repro.core.costmodel import KernelCostModel
+    from repro.core.network import paper_testbed
+    from repro.core.scheduler import schedule_joint
+    from repro.models.opgraph_models import profile_opgraph
+
+    cfg = resolve(arch).smoke
+    graph = profile_opgraph(cfg, batch, seq)
+    shapes = {"tokens": (batch, seq), "labels": (batch, seq)}
+    profiles = graph.annotate(shapes)
+    cluster = paper_testbed(1, seed=0)
+    n_micro = 4
+
+    # ~10 GB/s codec: roughly the CPU fused-encode pace kernel_bench
+    # measures (re-pin from BENCH_kernel_topk on real hardware); "slow"
+    # is wire-speed-comparable, where compressing stops paying for itself.
+    devices = range(len(cluster.devices))
+    kc = {d: KernelCostModel(bytes_per_second=1e10) for d in devices}
+    kc_slow = {d: KernelCostModel(bytes_per_second=2e6) for d in devices}
+
+    out: Dict[str, Dict] = {}
+    for name, costs in (("free", None), ("priced", kc), ("slow", kc_slow)):
+        seed_model = EdgeCostModel(graph, profiles, cluster,
+                                   kernel_costs=costs or {})
+        jp = schedule_joint(graph, profiles, cluster, ratio=ratio, seed=0,
+                            cost_model=seed_model, verify=False)
+        sim_model = jp.cost_model.with_plan(jp.plan)
+        sim = simulate_iteration(graph, profiles, jp.schedule, cluster,
+                                 jp.plan, n_micro=n_micro,
+                                 cost_model=sim_model)
+        ratios = sorted(jp.plan.edge_ratio.values()) if jp.plan else []
+        out[name] = {
+            "iteration_s": sim.iteration_time,
+            "compress_busy_s": sim.compress_busy,
+            "pace_s": jp.predicted_pace,
+            "n_compressed_edges": float(len(ratios)),
+            "mean_ratio": float(sum(ratios) / len(ratios)) if ratios else 0.0,
+        }
+    base, priced = out["free"], out["priced"]
+    # overlap discount: codec seconds the pipeline hid behind compute
+    delta = priced["iteration_s"] - base["iteration_s"]
+    hidden = priced["compress_busy_s"] - delta
+    priced["overlap_hidden_s"] = hidden
+    priced["wall_delta_s"] = delta
+    for name, r in out.items():
+        csv_writer(
+            f"roofline_compress_ab_{name}", r["iteration_s"] * 1e6,
+            f"arch={arch},compress_busy_us={r['compress_busy_s'] * 1e6:.1f},"
+            f"edges={int(r['n_compressed_edges'])},"
+            f"mean_ratio={r['mean_ratio']:.1f}"
+            + (f",overlap_hidden_us={hidden * 1e6:.1f}"
+               if name == "priced" else ""))
+    return out
 
 
 def load_records(pattern: str = "*.json") -> List[Dict]:
@@ -28,11 +100,12 @@ def baseline_records() -> List[Dict]:
 
 
 def run(csv_writer):
+    ab = compression_ab(csv_writer)
     recs = [r for r in load_records() if r.get("status") == "ok"]
     if not recs:
         csv_writer("roofline_table", 0.0, "no dryrun records: run "
                    "`python -m repro.launch.dryrun --all` first")
-        return []
+        return {"compression_ab": ab, "rows": []}
     for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
         rf = r["roofline"]
         bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
@@ -44,4 +117,4 @@ def run(csv_writer):
             f"m={rf['memory_s']:.2e},coll={rf['collective_s']:.2e},"
             f"useful={ratio if ratio is None else round(ratio, 3)},"
             f"mem_GiB={r['mem']['peak_per_device'] / 2**30:.1f}")
-    return recs
+    return {"compression_ab": ab, "rows": recs}

@@ -12,6 +12,9 @@ Modes (composable; no flags runs ``--all-configs --lint``):
   the CI artifact).
 * ``--trace PATH`` — happens-before check on a recorded span log
   (``.jsonl`` or Chrome-trace ``.json``), repeatable.
+* ``--bench PATH`` — schema-validate a BENCH result/baseline JSON
+  (repeatable); ``--bench-tracked METRIC`` overrides the tracked-metric
+  set the gate keys on (repeatable, default ``pace``/``phi``).
 
 Exit status 1 when any error-severity finding survives; warnings print
 but do not fail (``--strict`` promotes them).
@@ -95,12 +98,18 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="also write lint findings as JSON (CI artifact)")
     ap.add_argument("--trace", action="append", default=[], metavar="PATH",
                     help="happens-before check a span log (repeatable)")
+    ap.add_argument("--bench", action="append", default=[], metavar="PATH",
+                    help="schema-validate a BENCH result JSON (repeatable)")
+    ap.add_argument("--bench-tracked", action="append", default=[],
+                    metavar="METRIC",
+                    help="tracked metric the bench gate keys on "
+                         "(repeatable; default: pace, phi)")
     ap.add_argument("--strict", action="store_true",
                     help="treat warnings as errors")
     args = ap.parse_args(argv)
 
     if not (args.all_configs or args.config or args.lint
-            or args.lint_json or args.trace):
+            or args.lint_json or args.trace or args.bench):
         args.all_configs = args.lint = True
 
     n_errors = 0
@@ -128,6 +137,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                             "message": x.message, "severity": x.severity}
                            for x in findings], f, indent=2)
             print(f"lint findings written to {args.lint_json}")
+
+    for path in args.bench:
+        from .bench import TRACKED_DEFAULT, check_bench_result
+        tracked = tuple(args.bench_tracked) or TRACKED_DEFAULT
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except Exception as e:
+            n_errors += _report(f"bench {path}",
+                                [Finding("bench-load", path,
+                                         f"cannot load: {e}")])
+            continue
+        findings = check_bench_result(payload, tracked=tracked, source=path)
+        if args.strict:
+            findings = [Finding(f.code, f.where, f.message)
+                        for f in findings]
+        n_errors += _report(f"bench {path}", findings)
 
     for path in args.trace:
         from .traceorder import check_trace_order, load_trace_events

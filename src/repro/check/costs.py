@@ -16,6 +16,14 @@ correction outside :func:`fit_link_corrections`' clamp.
 ratio above its edge's dtype-exact break-even, no integer-rounding wire
 inflation, and (when a placement is given) every planned edge actually
 crossing CompNodes.
+
+Since the Pallas codec fast path landed, compression also costs *compute*:
+when a ``cost_model`` carrying calibrated per-device
+:class:`repro.core.costmodel.KernelCostModel` entries is supplied, both
+checkers enforce the FusionLLM §6 premise that compression must outrun the
+bandwidth it buys back — any planned edge whose encode seconds meet or
+exceed the wire seconds saved is a ``compression-unprofitable`` finding
+(the planner's profitability guard should have dropped it).
 """
 from __future__ import annotations
 
@@ -44,6 +52,14 @@ def check_cost_model(model: EdgeCostModel,
     """Structural estimator/simulator parity for every cross edge under
     ``placement``, plus correction-clamp sanity."""
     out: List[Finding] = []
+    for dev, kc in sorted(model.kernel_costs.items()):
+        if not (math.isfinite(kc.alpha) and kc.alpha >= 0.0) \
+                or not kc.bytes_per_second > 0.0:
+            out.append(Finding(
+                "bad-kernel-cost", f"dev{dev}",
+                f"device {dev}: kernel cost alpha={kc.alpha!r} "
+                f"bytes_per_second={kc.bytes_per_second!r} — alpha must be "
+                "finite and >= 0, throughput positive (inf = free)"))
     for (i, j), c in sorted(model.link_corrections.items()):
         if not math.isfinite(c) or not \
                 _CORRECTION_CLAMP[0] <= c <= _CORRECTION_CLAMP[1]:
@@ -96,15 +112,31 @@ def check_cost_model(model: EdgeCostModel,
                 "seconds-underivable", edge,
                 f"edge {edge}: model prices {got_s!r}s but "
                 f"alpha-beta x correction gives {expect_s!r}s"))
+        enc_s = model.compress_seconds(a, n, src)
+        if enc_s > 0.0:
+            saved = model.link_seconds(src, dst, dense) - got_s
+            if enc_s >= saved and not _close(enc_s, saved):
+                out.append(Finding(
+                    "compression-unprofitable", edge,
+                    f"edge {edge}: encode costs {enc_s:.3g}s on dev{src}'s "
+                    f"codec but saves only {saved:.3g}s of wire time — "
+                    "compressing this edge slows the step down"))
     return out
 
 
 def check_compression_plan(graph: OpGraph,
                            profiles: Mapping[str, OpProfile],
                            plan: Optional[CompressionPlan],
-                           placement: Optional[Mapping[str, int]] = None
+                           placement: Optional[Mapping[str, int]] = None,
+                           cost_model: Optional[EdgeCostModel] = None
                            ) -> List[Finding]:
-    """AdaTopK plan invariants; ``plan=None`` (dense transport) passes."""
+    """AdaTopK plan invariants; ``plan=None`` (dense transport) passes.
+
+    ``cost_model`` (needs ``placement`` too) additionally enforces encode
+    profitability per planned cross edge: with calibrated kernel costs, an
+    edge whose codec seconds meet or exceed the wire seconds its ratio saves
+    is a ``compression-unprofitable`` finding.  A model without kernel
+    costs prices encode as free, so the check passes vacuously (legacy)."""
     if plan is None:
         return []
     out: List[Finding] = []
@@ -168,14 +200,37 @@ def check_compression_plan(graph: OpGraph,
                     "plan-edge-not-cross", edge,
                     f"planned edge {edge} does not cross CompNodes under "
                     "this placement (stale plan?)", severity=SEV_WARN))
+    if cost_model is not None and placement is not None:
+        m = cost_model.with_plan(plan)
+        for (a, n) in m.cross_edges(placement):
+            if (a, n) not in plan.edge_ratio:
+                continue
+            src, dst = placement[a], placement[n]
+            enc_s = m.compress_seconds(a, n, src)
+            if enc_s <= 0.0:
+                continue
+            try:
+                wire_s = m.edge_seconds(a, n, src, dst)
+                dense_s = m.link_seconds(src, dst, m.dense_bytes(a))
+            except KeyError:
+                continue   # missing-link is check_cost_model's finding
+            saved = dense_s - wire_s
+            if enc_s >= saved and not _close(enc_s, saved):
+                out.append(Finding(
+                    "compression-unprofitable", f"{a}->{n}",
+                    f"planned edge {a}->{n}: encode costs {enc_s:.3g}s on "
+                    f"dev{src}'s codec but saves only {saved:.3g}s of wire "
+                    "time — the plan slows the step down"))
     return out
 
 
 def verify_plan(graph: OpGraph, profiles: Mapping[str, OpProfile],
                 plan: Optional[CompressionPlan],
                 placement: Optional[Mapping[str, int]] = None,
+                cost_model: Optional[EdgeCostModel] = None,
                 strict: bool = False) -> List[Finding]:
-    findings = check_compression_plan(graph, profiles, plan, placement)
+    findings = check_compression_plan(graph, profiles, plan, placement,
+                                      cost_model)
     return raise_findings(findings, CompressionCheckError,
                           "compression plan failed verification",
                           strict=strict)

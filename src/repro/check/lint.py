@@ -1,6 +1,6 @@
 """Repo-custom AST lint (repro.check, component 6).
 
-Three rules that encode hard-won repo conventions generic linters cannot
+Four rules that encode hard-won repo conventions generic linters cannot
 know, run over every ``.py`` under ``src/repro/``:
 
 * ``raw-byte-math`` — wire-byte / link-time arithmetic
@@ -19,6 +19,12 @@ know, run over every ``.py`` under ``src/repro/``:
   ``if __name__ == "__main__"`` block, or a ``__main__.py`` entry
   module.  Library output goes through ``repro.obs``; prints in
   import-time or library code corrupt piped CLI output.
+* ``kernel-dispatch-bypass`` — a ``topk_mask``/``topk_select`` call with
+  no ``use_kernel=`` keyword inside ``distributed/`` or ``core/rad.py``.
+  Those are the step's hot paths: compression there must flow through the
+  kernel dispatch policy so the Pallas fast path (and its pricing
+  telemetry) is reachable; a bare call silently pins the legacy global
+  top-k and makes the planner's ``compress_seconds`` term a lie.
 
 Findings use code=rule and ``where="path:line"`` so CI can upload them
 as an artifact and tests can key on them.
@@ -42,6 +48,10 @@ _LINKMATH_OK = {
 }
 _WALLCLOCK_SCOPES = ("core/", "elastic/")
 _LINK_ATTRS = {"beta", "bandwidth"}
+# hot-path modules where compression calls must honour the kernel dispatch
+# policy (pass use_kernel= through) instead of silently pinning legacy XLA
+_DISPATCH_SCOPES = ("distributed/", "core/rad.py")
+_DISPATCH_FNS = {"topk_mask", "topk_select"}
 
 
 class LintError(CheckError):
@@ -74,6 +84,7 @@ class _Visitor(ast.NodeVisitor):
         self.itemsize_ok = rel in _ITEMSIZE_OK
         self.linkmath_ok = rel in _LINKMATH_OK
         self.sim_scope = rel.startswith(_WALLCLOCK_SCOPES)
+        self.dispatch_scope = rel.startswith(_DISPATCH_SCOPES)
         # a __main__.py IS the CLI entry point — all of it is "main"
         self.entry_point = rel.endswith("__main__.py")
 
@@ -126,6 +137,16 @@ class _Visitor(ast.NodeVisitor):
             self._hit("bare-print", node,
                       "bare print() in library code — route output "
                       "through repro.obs or a main() entry point")
+        if self.dispatch_scope:
+            name = f.id if isinstance(f, ast.Name) else \
+                (f.attr if isinstance(f, ast.Attribute) else None)
+            if name in _DISPATCH_FNS and not any(
+                    kw.arg == "use_kernel" for kw in node.keywords):
+                self._hit("kernel-dispatch-bypass", node,
+                          f"{name}() on a hot path without use_kernel= — "
+                          "thread the kernel dispatch policy through so "
+                          "the Pallas fast path and its cost telemetry "
+                          "stay reachable")
         self.generic_visit(node)
 
 

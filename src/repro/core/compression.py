@@ -33,30 +33,49 @@ Beyond-paper extras (both off by default, flagged where used):
   decoded form stays dense;
 * error-feedback memory (residual accumulation) for the gradient direction.
 
-The hot inner op (`topk_mask`) dispatches to the Pallas TPU kernel in
-:mod:`repro.kernels.topk_compress` when requested; the default is the XLA
-path, bit-identical to :mod:`repro.kernels.ref`.
+The hot inner op (`topk_mask`) dispatches through the kernel policy in
+:mod:`repro.kernels.ops` (``resolve_policy``): ``use_kernel`` accepts
+``False``/``"off"`` (legacy global top-k XLA — the default, bit-compatible
+with :mod:`repro.kernels.ref`), ``"auto"`` (fused Pallas encode→decode on
+TPU, fused blockwise XLA fallback on CPU — same selection semantics either
+way), and ``True``/``"force"`` (Pallas even on CPU, interpret mode).  When a
+kernel mode is active the sparsified tensor is the decode of the fused wire
+encode — the consumer sees exactly what the "mask" encoding carried.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+KernelPolicy = Union[bool, str, None]
+
 
 # ------------------------------------------------------------- primitives --
 def topk_select(x: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
     """Flat Top-K by magnitude: returns (values, int32 indices), the paper's
-    wire format (we use int32 on TPU; the byte model still charges int64 to
-    stay faithful to Eq. 7 unless mask encoding is chosen)."""
+    wire format.
+
+    One ``top_k`` over the magnitude key and one gather for the signed
+    payload — the magnitudes ``top_k`` materializes are ``|x|``, not ``x``,
+    so they cannot serve as wire values and the single gather is
+    irreducible (no second magnitude pass, no ``flat[idx]`` advanced-index
+    re-gather).
+
+    Wire-format note: indices are emitted as **int32** (boundary numel is
+    far below 2^31), while ``wire_bytes(encoding="paper")`` still charges
+    **8 bytes per index** to stay faithful to Eq. 7's int64 accounting —
+    the byte model is deliberately conservative relative to this payload.
+    """
     flat = x.reshape(-1)
     k = int(min(max(k, 1), flat.shape[0]))
     _, idx = jax.lax.top_k(jnp.abs(flat), k)
-    return flat[idx], idx.astype(jnp.int32)
+    idx = idx.astype(jnp.int32)
+    return jnp.take(flat, idx, axis=0), idx
 
 
 def topk_decode(values: jax.Array, idx: jax.Array, shape: Tuple[int, ...],
@@ -72,13 +91,20 @@ def topk_decode(values: jax.Array, idx: jax.Array, shape: Tuple[int, ...],
     return flat.reshape(shape)
 
 
-def topk_mask(x: jax.Array, k: int, use_kernel: bool = False) -> jax.Array:
+def topk_mask(x: jax.Array, k: int,
+              use_kernel: KernelPolicy = False) -> jax.Array:
     """Dense sparsified tensor: x with everything below the k-th magnitude
     zeroed.  Semantically identical to select→decode, but stays dense (no
-    scatter) — the TPU-native formulation used inside jitted steps."""
-    if use_kernel:
-        from repro.kernels import ops as _kops
-        return _kops.topk_mask(x, k)
+    scatter) — the TPU-native formulation used inside jitted steps.
+
+    ``use_kernel`` is the kernel dispatch policy (module docstring): any
+    non-"global" mode routes through the fused wire codec
+    (:func:`repro.kernels.ops.codec_topk_mask`) — blockwise, tie-capped,
+    wire-faithful."""
+    from repro.kernels import ops as _kops
+    mode = _kops.resolve_policy(use_kernel)
+    if mode != "global":
+        return _kops.codec_topk_mask(x, k, mode=mode)
     flat = x.reshape(-1)
     k = int(min(max(k, 1), flat.shape[0]))
     vals, idx = jax.lax.top_k(jnp.abs(flat), k)
@@ -118,6 +144,14 @@ def wire_bytes(numel: int, ratio: float, encoding: str = "paper",
     if encoding == "mask":
         return float(k * itemsize + numel / 8.0)
     raise ValueError(f"unknown encoding {encoding!r}")
+
+
+def dense_payload_bytes(x: jax.Array) -> float:
+    """Dense in-memory bytes of a boundary tensor.  This is the sanctioned
+    home for the ``numel·itemsize`` product — callers outside the cost-model
+    layer (e.g. rad.py's kernel-timing hook) must use this instead of inline
+    itemsize arithmetic (the ``raw-byte-math`` lint rule enforces it)."""
+    return float(int(np.prod(x.shape)) * x.dtype.itemsize)
 
 
 # --------------------------------------------------------------- AdaTopK ---
@@ -233,6 +267,13 @@ def plan_adatopk(graph, profiles, cluster, placement: Mapping[str, int],
     the dense payload.  The guarantee is hard: no planned edge carries more
     wire bytes than its dense tensor.
 
+    If the cost model carries calibrated per-device kernel costs
+    (``kernel_costs``), each surviving edge must also be *profitable*: the
+    fused-encode compute seconds on the producer's codec stream must be
+    strictly less than the link seconds the ratio saves, else the edge
+    stays dense (FusionLLM §6's premise — compression must outrun the
+    bandwidth it buys back).
+
     ``cost_model`` supplies the byte/seconds arithmetic (its own compression
     plan is ignored — AdaTopK rates links by their *uncompressed* transport
     time); by default a dense model over ``(graph, profiles, cluster)`` is
@@ -254,13 +295,26 @@ def plan_adatopk(graph, profiles, cluster, placement: Mapping[str, int],
         else [float(index_overhead)] * len(edges)
     ratios = adaptive_ratios(times, ratio, index_overhead=overheads,
                              break_even=be_edge)
+    kernel_costs = getattr(model, "kernel_costs", None) or {}
     edge_ratio: Dict[Tuple[str, str], float] = {}
     for (a, n), r_i in zip(edges, ratios):
         if r_i <= 1.0:
             continue
-        if wire_bytes(model.numel(a), r_i, encoding,
-                      itemsize=model.itemsize(a)) >= model.dense_bytes(a):
+        wire = wire_bytes(model.numel(a), r_i, encoding,
+                          itemsize=model.itemsize(a))
+        if wire >= model.dense_bytes(a):
             continue         # integer rounding re-inflated this edge
+        kc = kernel_costs.get(placement[a])
+        if kc is not None:
+            # Profitability: the fused encode runs on the producer's codec
+            # stream; if its compute time exceeds the wire seconds the
+            # ratio saves on this link, compressing slows the step down.
+            src, dst = placement[a], placement[n]
+            dense = model.dense_bytes(a)
+            saved = (model.link_seconds(src, dst, dense)
+                     - model.link_seconds(src, dst, wire))
+            if kc.seconds(dense) >= saved:
+                continue
         edge_ratio[(a, n)] = r_i
     return CompressionPlan(edge_ratio=edge_ratio, base_ratio=ratio,
                            encoding=encoding, error_feedback=error_feedback)
@@ -269,11 +323,13 @@ def plan_adatopk(graph, profiles, cluster, placement: Mapping[str, int],
 # ------------------------------------------------- differentiable boundary --
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
 def boundary_compress(x: jax.Array, k_fwd: int, k_bwd: int,
-                      use_kernel: bool = False) -> jax.Array:
+                      use_kernel: KernelPolicy = False) -> jax.Array:
     """Lossy stage boundary: FP transports Top-k_fwd(x); BP transports
     Top-k_bwd(grad).  Matches the paper's RAD transport exactly — the
     receiving stage trains on the sparsified activation, the sending stage
-    receives the sparsified boundary gradient.  0 < k ≥ numel disables."""
+    receives the sparsified boundary gradient.  0 < k ≥ numel disables.
+    ``use_kernel`` is the kernel dispatch policy (a hashable scalar — safe
+    as a ``custom_vjp`` nondiff arg)."""
     return topk_mask(x, k_fwd, use_kernel=use_kernel)
 
 
@@ -290,7 +346,7 @@ boundary_compress.defvjp(_bc_fwd, _bc_bwd)
 
 
 def compress_for_edge(x: jax.Array, ratio: float,
-                      use_kernel: bool = False,
+                      use_kernel: KernelPolicy = False,
                       compress_bwd: bool = True) -> jax.Array:
     """Apply the plan's ratio to a concrete boundary tensor inside a jitted
     step (static k derived from the trace-time shape).  ``compress_bwd``
@@ -316,8 +372,18 @@ class ErrorFeedbackState:
 
 
 def ef_compress(x: jax.Array, state: ErrorFeedbackState, k: int,
-                use_kernel: bool = False) -> Tuple[jax.Array, ErrorFeedbackState]:
-    """Compress (x + residual); remember what was dropped."""
+                use_kernel: KernelPolicy = False
+                ) -> Tuple[jax.Array, ErrorFeedbackState]:
+    """Compress (x + residual); remember what was dropped.
+
+    Under a kernel dispatch mode the residual update is fused into the
+    encode kernel itself (:func:`repro.kernels.ops.codec_ef_topk`) — one
+    pallas_call emits (values, bitmap, new_residual)."""
+    from repro.kernels import ops as _kops
+    mode = _kops.resolve_policy(use_kernel)
+    if mode != "global":
+        sent, newr = _kops.codec_ef_topk(x, state.residual, k, mode=mode)
+        return sent, ErrorFeedbackState(residual=newr)
     corrected = x + state.residual
-    sent = topk_mask(corrected, k, use_kernel=use_kernel)
+    sent = topk_mask(corrected, k, use_kernel=False)
     return sent, ErrorFeedbackState(residual=corrected - sent)

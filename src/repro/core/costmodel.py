@@ -19,7 +19,11 @@ back into the DP at all.  :class:`EdgeCostModel` composes, per op-pair edge:
   producer's profile, index overhead, break-even clamp) under an optional
   :class:`repro.core.compression.CompressionPlan`,
 * optional telemetry-calibrated per-link corrections (a measured/modeled
-  seconds ratio fitted by :func:`fit_link_corrections`).
+  seconds ratio fitted by :func:`fit_link_corrections`),
+* optional telemetry-calibrated per-device **kernel costs** — the compute
+  seconds the fused compression codec spends per edge
+  (:class:`KernelCostModel`, fitted by :func:`fit_kernel_costs` from
+  ``KernelTiming`` samples), so planners stop pricing compression at zero.
 
 Every byte-accounting consumer — the min-bottleneck DP, OP-Fence, the Eq. 1
 estimator, the discrete-event simulator, AdaTopK planning, and the elastic
@@ -41,6 +45,26 @@ from .opgraph import OpGraph, OpProfile
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelCostModel:
+    """Per-device compression-codec cost: ``seconds(d) = alpha + d/B`` for
+    ``d`` dense payload bytes through the fused encode(+EF) kernel.
+
+    ``alpha`` is the fixed launch/dispatch overhead; ``bytes_per_second``
+    the codec's streaming throughput (``inf`` = free, the legacy
+    assumption).  Fitted per device by :func:`fit_kernel_costs` from
+    ``KernelTiming`` telemetry."""
+
+    alpha: float = 0.0
+    bytes_per_second: float = float("inf")
+
+    def seconds(self, dense_bytes: float) -> float:
+        t = float(self.alpha)
+        if np.isfinite(self.bytes_per_second) and self.bytes_per_second > 0:
+            t += float(dense_bytes) / float(self.bytes_per_second)
+        return t
+
+
+@dataclasses.dataclass(frozen=True)
 class EdgeCost:
     """Fully resolved cost of one cross-CompNode edge."""
 
@@ -57,35 +81,45 @@ class EdgeCostModel:
     """Per-edge transported bytes and seconds, keyed by (producer, consumer).
 
     Immutable by convention: derive variants with :meth:`with_plan` /
-    :meth:`with_cluster` / :meth:`with_link_corrections` instead of mutating.
-    ``plan=None`` means dense transport; ``link_corrections`` maps a directed
-    CompNode pair ``(i, j)`` to a multiplicative correction on the modeled
-    link seconds (1.0 = trust the α–β fit).
+    :meth:`with_cluster` / :meth:`with_link_corrections` /
+    :meth:`with_kernel_costs` instead of mutating.  ``plan=None`` means dense
+    transport; ``link_corrections`` maps a directed CompNode pair ``(i, j)``
+    to a multiplicative correction on the modeled link seconds (1.0 = trust
+    the α–β fit); ``kernel_costs`` maps a device id to its
+    :class:`KernelCostModel` (absent = codec priced free, the legacy
+    behaviour, so unpinned baselines are unchanged).
     """
 
     def __init__(self, graph: OpGraph, profiles: Mapping[str, OpProfile],
                  cluster: ClusterSpec,
                  plan: Optional[CompressionPlan] = None,
-                 link_corrections: Optional[Mapping[Tuple[int, int], float]] = None):
+                 link_corrections: Optional[Mapping[Tuple[int, int], float]] = None,
+                 kernel_costs: Optional[Mapping[int, KernelCostModel]] = None):
         self.graph = graph
         self.profiles = profiles
         self.cluster = cluster
         self.plan = plan
         self.link_corrections = dict(link_corrections or {})
+        self.kernel_costs = dict(kernel_costs or {})
 
     # ------------------------------------------------------------ variants --
     def with_plan(self, plan: Optional[CompressionPlan]) -> "EdgeCostModel":
         return EdgeCostModel(self.graph, self.profiles, self.cluster, plan,
-                             self.link_corrections)
+                             self.link_corrections, self.kernel_costs)
 
     def with_cluster(self, cluster: ClusterSpec) -> "EdgeCostModel":
         return EdgeCostModel(self.graph, self.profiles, cluster, self.plan,
-                             self.link_corrections)
+                             self.link_corrections, self.kernel_costs)
 
     def with_link_corrections(self, corrections: Mapping[Tuple[int, int], float]
                               ) -> "EdgeCostModel":
         return EdgeCostModel(self.graph, self.profiles, self.cluster,
-                             self.plan, corrections)
+                             self.plan, corrections, self.kernel_costs)
+
+    def with_kernel_costs(self, kernel_costs: Mapping[int, KernelCostModel]
+                          ) -> "EdgeCostModel":
+        return EdgeCostModel(self.graph, self.profiles, self.cluster,
+                             self.plan, self.link_corrections, kernel_costs)
 
     # -------------------------------------------------------------- per-op --
     def numel(self, op: str) -> int:
@@ -139,6 +173,22 @@ class EdgeCostModel:
         return self.link_seconds(src, dst,
                                  self.edge_wire_bytes(producer, consumer))
 
+    def compress_seconds(self, producer: str, consumer: str,
+                         device: int) -> float:
+        """Compute seconds the fused compression codec spends on one edge's
+        payload, on ``device``'s codec stream (the encoder side — the
+        transfer's source).  Zero when the edge is unplanned/dense or the
+        device has no calibrated kernel cost (legacy: compression is free).
+        The term covers the whole codec (encode + EF update; decode rides
+        the same calibrated throughput)."""
+        r = self.ratio(producer, consumer)
+        if r <= 1.0 or self.encoding == "none":
+            return 0.0
+        kc = self.kernel_costs.get(device)
+        if kc is None:
+            return 0.0
+        return kc.seconds(self.dense_bytes(producer))
+
     def edge_cost(self, producer: str, consumer: str,
                   src: int, dst: int) -> EdgeCost:
         wb = self.edge_wire_bytes(producer, consumer)
@@ -157,26 +207,35 @@ class EdgeCostModel:
                     yield (a, n)
 
     def stage_pace(self, schedule) -> float:
-        """Eq. 3 steady-state pace ``max_k max(C_k, R_k)`` of a schedule under
-        this model — the *derived* stage-boundary view.
+        """Eq. 3 steady-state pace ``max_k max(C_k, R_k, E_k)`` of a schedule
+        under this model — the *derived* stage-boundary view.
 
         ``C_k`` uses forward FLOPs (the same objective the min-bottleneck DP
         optimizes) and ``R_k`` charges every cross-stage edge to the CompNode
         owning the consumer op, the shared attribution of estimator,
-        simulator, and telemetry.
+        simulator, and telemetry.  ``E_k`` is the codec stream: per-device
+        fused-encode seconds summed over the edges *produced* there — the
+        codec double-buffers against the next micro-batch's compute, so in
+        steady state it bounds pace exactly like ``C`` and ``R`` do (zero
+        unless kernel costs are calibrated).
         """
         placement = schedule.placement
         comp: Dict[int, float] = {}
         recv: Dict[int, float] = {}
+        enc: Dict[int, float] = {}
         for d in schedule.stage_devices():
             comp[d] = sum(self.profiles[n].fwd_flops
                           for n in schedule.assignment[d]) \
                 / self.cluster.devices[d].speed
             recv[d] = 0.0
+            enc[d] = 0.0
         for (a, n) in self.cross_edges(placement):
             recv[placement[n]] = recv.get(placement[n], 0.0) + \
                 self.edge_seconds(a, n, placement[a], placement[n])
-        return max((max(comp[d], recv[d]) for d in comp), default=0.0)
+            enc[placement[a]] = enc.get(placement[a], 0.0) + \
+                self.compress_seconds(a, n, placement[a])
+        return max((max(comp[d], recv[d], enc.get(d, 0.0)) for d in comp),
+                   default=0.0)
 
 
 def fit_link_corrections(measured: Mapping[Tuple[int, int],
@@ -216,4 +275,30 @@ def fit_link_corrections(measured: Mapping[Tuple[int, int],
         if denom <= 0.0:
             continue
         out[(i, j)] = float(np.clip(np.dot(pred, obs) / denom, lo, hi))
+    return out
+
+
+def fit_kernel_costs(measured: Mapping[int, Sequence[Tuple[float, float]]]
+                     ) -> Dict[int, KernelCostModel]:
+    """Telemetry-calibrated per-device codec costs.
+
+    ``measured[device]`` is a sequence of ``(dense_bytes, seconds)``
+    ``KernelTiming`` samples from that device's fused compression codec.
+    Fit is the least-squares seconds-per-byte slope through the origin —
+    the same estimator shape as :func:`fit_link_corrections`, so outliers
+    already rejected by the telemetry MAD window cannot tilt it.  Devices
+    with degenerate samples (no bytes, non-positive slope) are skipped:
+    absence means "priced free", never "priced garbage"."""
+    out: Dict[int, KernelCostModel] = {}
+    for device, samples in measured.items():
+        b = np.array([nb for nb, _ in samples], dtype=np.float64)
+        s = np.array([sec for _, sec in samples], dtype=np.float64)
+        denom = float(np.dot(b, b))
+        if denom <= 0.0:
+            continue
+        slope = float(np.dot(b, s) / denom)   # seconds per dense byte
+        if slope <= 0.0 or not np.isfinite(slope):
+            continue
+        out[int(device)] = KernelCostModel(alpha=0.0,
+                                           bytes_per_second=1.0 / slope)
     return out

@@ -31,7 +31,7 @@ from .opgraph import OpData, OpGraph, OpProfile, OpType
 from .rad import (PipelineProgram, init_ef_state, pipeline_loss_and_grad,
                   pipeline_loss_and_grad_ef)
 from .scheduler import Schedule
-from ..obs.trace import CAT_BWD, CAT_FWD, CAT_TRANSFER
+from ..obs.trace import CAT_BWD, CAT_ENCODE, CAT_FWD, CAT_TRANSFER
 
 
 # ========================================================== telemetry hook ==
@@ -84,19 +84,47 @@ class LinkTiming:
     step: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class KernelTiming:
+    """One compression-codec observation: the fused encode(+EF) kernel on
+    CompNode ``node`` chewed through ``nbytes`` of *dense* payload in
+    ``seconds`` of compute.
+
+    Emitted by :func:`simulate_iteration` (one sample per compressed edge
+    transfer, priced by the model's :class:`~repro.core.costmodel.
+    KernelCostModel`) and by :class:`DecentralizedRuntime` (measured host
+    wall-clock around the traced codec).  The broker's TelemetryLog windows
+    and MAD-filters these into the ``(dense_bytes, seconds)`` pairs
+    :func:`repro.core.costmodel.fit_kernel_costs` turns into per-device
+    codec costs — closing the same loop link calibration closes for α–β.
+    ``nbytes`` is dense payload, not wire bytes: codec time scales with
+    what the kernel reads, not with what survives compression."""
+
+    node: int                  # CompNode (device) index running the codec
+    nbytes: float              # dense payload bytes through the kernel
+    seconds: float             # codec compute seconds
+    backward: bool = False
+    step: int = 0
+
+
 class TelemetrySink:
     """Anything with ``record(StepTiming)`` (and optionally
-    ``record_link(LinkTiming)``); the trivial list-backed sink."""
+    ``record_link(LinkTiming)`` / ``record_kernel(KernelTiming)``); the
+    trivial list-backed sink."""
 
     def __init__(self):
         self.samples: List[StepTiming] = []
         self.link_samples: List[LinkTiming] = []
+        self.kernel_samples: List[KernelTiming] = []
 
     def record(self, sample: StepTiming) -> None:
         self.samples.append(sample)
 
     def record_link(self, sample: LinkTiming) -> None:
         self.link_samples.append(sample)
+
+    def record_kernel(self, sample: KernelTiming) -> None:
+        self.kernel_samples.append(sample)
 
 
 # ===================================================== functional executor ==
@@ -145,7 +173,7 @@ class DecentralizedRuntime:
 
     def __init__(self, graph: OpGraph, schedule: Schedule,
                  plan: Optional[CompressionPlan] = None,
-                 use_kernel: bool = False,
+                 use_kernel: Any = False,
                  telemetry: Optional[Any] = None,
                  trace: Optional[Any] = None):
         self.graph = graph
@@ -185,6 +213,21 @@ class DecentralizedRuntime:
                           "step": self.step_index})
         return cb
 
+    def _kernel_cb(self, mb_idx: int):
+        """Measured codec-time hook -> KernelTiming samples, only when the
+        sink can absorb them (forcing device sync for nobody is not free)."""
+        if self.telemetry is None \
+                or not hasattr(self.telemetry, "record_kernel"):
+            return None
+        devs = self.schedule.stage_devices()
+
+        def cb(stage: int, backward: bool, seconds: float,
+               dense_bytes: float) -> None:
+            self.telemetry.record_kernel(KernelTiming(
+                node=devs[stage], nbytes=dense_bytes, seconds=seconds,
+                backward=backward, step=self.step_index))
+        return cb
+
     def train_step(self, params: Mapping[str, Any],
                    micro_batches: Sequence[Mapping[str, jax.Array]]
                    ) -> Tuple[jax.Array, Dict[str, Any]]:
@@ -192,16 +235,18 @@ class DecentralizedRuntime:
         acc: Optional[Dict[str, Any]] = None
         for mb_idx, mb in enumerate(micro_batches):
             cb = self._timing_cb(mb_idx)
+            kcb = self._kernel_cb(mb_idx)
             if self.plan.error_feedback:
                 if self.ef_state is None:
                     self.ef_state = init_ef_state(self.prog, params, mb)
                 loss, grads, self.ef_state = pipeline_loss_and_grad_ef(
                     self.prog, params, mb, self.plan, self.ef_state,
-                    self.use_kernel, timing_cb=cb, trace=self.trace)
+                    self.use_kernel, timing_cb=cb, trace=self.trace,
+                    kernel_cb=kcb)
             else:
                 loss, grads = pipeline_loss_and_grad(
                     self.prog, params, mb, self.plan, self.use_kernel,
-                    timing_cb=cb, trace=self.trace)
+                    timing_cb=cb, trace=self.trace, kernel_cb=kcb)
             # traffic accounting (envelope per cross-stage edge, FP + BP)
             for si, sd in enumerate(self.prog.subdags):
                 for a in sd.required_acti:
@@ -235,6 +280,8 @@ class SimResult:
     link_busy: float
     comm_bytes: float
     events: List[Tuple[float, float, str]]  # (start, end, label)
+    compress_busy: float = 0.0  # codec-stream seconds (0 unless the model
+                                # carries calibrated kernel costs)
 
     @property
     def utilization(self) -> List[float]:
@@ -262,9 +309,12 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
     # (e.g. shared attention, cross-attention) may skip stages — each gets
     # its own link transfer.  ``charge`` is the stage owning the consumer op,
     # the stage whose telemetry sample absorbs the transfer time (matching
-    # the estimator's recv attribution, see StepTiming).
-    # (from, to, seconds, charge, bytes)
-    edges: List[Tuple[int, int, float, int, float]] = []
+    # the estimator's recv attribution, see StepTiming).  ``t_enc`` is the
+    # codec seconds on the transfer's *source* device (FP: the producer
+    # encodes the activation; BP: the consumer encodes the boundary
+    # gradient) — zero unless the model carries calibrated kernel costs.
+    # (from, to, seconds, charge, wire_bytes, enc_seconds, dense_bytes)
+    edges: List[Tuple[int, int, float, int, float, float, float]] = []
     stage_of = {d: i for i, d in enumerate(stages)}
     total_bytes = 0.0
     for n, node in graph.nodes.items():
@@ -278,8 +328,10 @@ def _stage_tables(graph: OpGraph, profiles: Mapping[str, OpProfile],
             if backward:
                 src, dst = dst, src
             t = model.link_seconds(src, dst, nbytes)
+            t_enc = model.compress_seconds(a, n, src)
             edges.append((stage_of[src], stage_of[dst], t,
-                          stage_of[placement[n]], nbytes))
+                          stage_of[placement[n]], nbytes, t_enc,
+                          model.dense_bytes(a)))
             total_bytes += nbytes
     return stages, comp, edges, total_bytes
 
@@ -303,7 +355,15 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
     elastic broker's TelemetryLog aggregates for straggler detection.  A
     sink that additionally exposes ``record_link(LinkTiming)`` also gets one
     sample per cross-stage edge transfer (micro-batch × direction), the raw
-    per-link observations closed-loop calibration fits corrections from.
+    per-link observations closed-loop calibration fits corrections from;
+    one that exposes ``record_kernel(KernelTiming)`` gets one sample per
+    *compressed* edge transfer when the cost model carries calibrated
+    kernel costs (the codec-stream spans, on trace track ``codec<dev>``).
+    Compression compute is modeled as a per-boundary span on the source
+    device's serial codec stream: it delays the transfer's availability but
+    double-buffers against the device's next micro-batch compute
+    (``StepTiming.compute_seconds`` excludes it by design — the detector's
+    estimator parity is over stage compute + recv only).
 
     ``cost_model`` supplies the wire encoding (its plan, overriding the
     ``plan`` argument) and any telemetry-calibrated link corrections; by
@@ -326,19 +386,23 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                               plan or plan_none(graph, schedule.placement))
 
     record_link = getattr(telemetry, "record_link", None)
+    record_kernel = getattr(telemetry, "record_kernel", None)
     tracer = trace if getattr(trace, "enabled", False) else None
 
-    def run_pass(backward: bool, t0: float, events, device_free, busy):
+    def run_pass(backward: bool, t0: float, events, device_free, busy,
+                 enc_free):
         stages, comp, edges, nbytes = _stage_tables(
             graph, profiles, schedule, cluster, model, backward)
         k = len(stages)
         order = list(range(k - 1, -1, -1)) if backward else list(range(k))
-        in_edges: Dict[int, List[Tuple[int, float, int, float]]] = {}
-        for (s, d2, t, charge, ebytes) in edges:
-            in_edges.setdefault(d2, []).append((s, t, charge, ebytes))
+        in_edges: Dict[int, List[Tuple[int, float, int, float, float, float]]] = {}
+        for (s, d2, t, charge, ebytes, t_enc, dbytes) in edges:
+            in_edges.setdefault(d2, []).append((s, t, charge, ebytes,
+                                                t_enc, dbytes))
         link_free: Dict[Tuple[int, int], float] = {}
         done = {}  # (stage, mb) -> finish time
         comm_total = 0.0
+        enc_total = 0.0
         comm_charged: Dict[Tuple[int, int], float] = {}  # (stage, mb) -> s
         cat = CAT_BWD if backward else CAT_FWD
         tag = "B" if backward else "F"
@@ -346,10 +410,31 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
             for pos, st in enumerate(order):
                 dev = stages[st]
                 ready = t0
-                for (src, tcomm, charge, ebytes) in in_edges.get(st, []):
+                for (src, tcomm, charge, ebytes, t_enc, dbytes) \
+                        in in_edges.get(st, []):
                     dep = done.get((src, mb))
                     if dep is None:
                         continue
+                    # Codec span: the fused encode runs on the source
+                    # device's serial codec stream, *double-buffered*
+                    # against that device's next micro-batch compute — it
+                    # delays when the payload reaches the link, but never
+                    # pushes device_free.
+                    if t_enc > 0.0:
+                        src_dev = stages[src]
+                        e_start = max(dep, enc_free.get(src_dev, t0))
+                        dep = e_start + t_enc
+                        enc_free[src_dev] = dep
+                        enc_total += t_enc
+                        if record_kernel is not None:
+                            record_kernel(KernelTiming(
+                                node=src_dev, nbytes=dbytes, seconds=t_enc,
+                                backward=backward, step=step))
+                        if tracer is not None:
+                            tracer.span(
+                                CAT_ENCODE, f"{tag}enc.mb{mb}",
+                                f"codec{src_dev}", e_start, dep,
+                                args={"dense_bytes": dbytes, "mb": mb})
                     lk = (src, st)
                     start = max(dep, link_free.get(lk, t0))
                     link_free[lk] = start + tcomm
@@ -387,19 +472,22 @@ def simulate_iteration(graph: OpGraph, profiles: Mapping[str, OpProfile],
                         comm_seconds=comm_charged.get((st, mb), 0.0),
                         step=step))
         finish = max(done.values()) if done else t0
-        return finish, comm_total, nbytes * n_micro
+        return finish, comm_total, nbytes * n_micro, enc_total
 
     events: List[Tuple[float, float, str]] = []
     device_free: Dict[int, float] = {}
     busy: Dict[int, float] = {}
-    t_fwd, comm_f, bytes_f = run_pass(False, 0.0, events, device_free, busy)
-    t_end, comm_b, bytes_b = run_pass(True, t_fwd, events, device_free, busy)
+    enc_free: Dict[int, float] = {}
+    t_fwd, comm_f, bytes_f, enc_f = run_pass(False, 0.0, events, device_free,
+                                             busy, enc_free)
+    t_end, comm_b, bytes_b, enc_b = run_pass(True, t_fwd, events, device_free,
+                                             busy, enc_free)
     n_dev = len(cluster)
     return SimResult(
         iteration_time=t_end, fwd_time=t_fwd, bwd_time=t_end - t_fwd,
         device_busy=[busy.get(d, 0.0) for d in range(n_dev)],
         link_busy=comm_f + comm_b, comm_bytes=bytes_f + bytes_b,
-        events=sorted(events))
+        events=sorted(events), compress_busy=enc_f + enc_b)
 
 
 # ================================================= churn-event simulation ==
@@ -487,5 +575,6 @@ def pipeline_fill_seconds(graph: OpGraph, profiles: Mapping[str, OpProfile],
     for backward in (False, True):
         _, comp, edges, _ = _stage_tables(graph, profiles, schedule, cluster,
                                           model, backward)
-        total += sum(comp) + sum(t for (_, _, t, _, _) in edges)
+        total += sum(comp) + sum(t + t_enc
+                                 for (_, _, t, _, _, t_enc, _) in edges)
     return total

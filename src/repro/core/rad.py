@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .compression import CompressionPlan, compress_for_edge, plan_none
+from .compression import (CompressionPlan, KernelPolicy, compress_for_edge,
+                          dense_payload_bytes, plan_none)
 from .opgraph import OpGraph, OpType, SubDag
 from ..obs.trace import CAT_ENCODE
 
@@ -39,19 +40,35 @@ Params = Mapping[str, Any]
 # The DecentralizedRuntime wraps this into StepTiming telemetry samples.
 TimingCb = Callable[[int, bool, float], None]
 
+# Measured-wall-clock codec hook: (stage_index, backward, seconds,
+# dense_bytes) per compressed boundary edge.  The DecentralizedRuntime wraps
+# this into KernelTiming telemetry samples — the raw material of
+# fit_kernel_costs calibration.
+KernelCb = Callable[[int, bool, float, float], None]
+
 
 def _traced_compress(trace, name: str, track: str, backward: bool,
-                     ratio: float, fn):
+                     ratio: float, fn, kernel_cb: Optional[KernelCb] = None,
+                     stage: int = 0, dense_bytes: float = 0.0):
     """Run one boundary compression, recording a wall-clock encode span when
-    tracing.  The decode half is fused into the same op (topk_mask is
-    select→decode without materializing the wire format), so the span covers
-    the whole codec; ``ratio<=1`` edges transport dense and record nothing."""
-    if trace is None or not getattr(trace, "enabled", False) or ratio <= 1.0:
+    tracing and a ``kernel_cb`` timing sample when instrumented.  The decode
+    half is fused into the same op (a kernel-dispatched topk_mask is
+    encode→decode of the wire format), so both cover the whole codec;
+    ``ratio<=1`` edges transport dense and record nothing."""
+    traced = trace is not None and getattr(trace, "enabled", False)
+    if ratio <= 1.0 or (not traced and kernel_cb is None):
         return fn()
-    with trace.region(CAT_ENCODE, name, track,
-                      args={"ratio": ratio, "backward": backward}):
+    t0 = time.perf_counter() if kernel_cb is not None else 0.0
+    if traced:
+        with trace.region(CAT_ENCODE, name, track,
+                          args={"ratio": ratio, "backward": backward}):
+            out = fn()
+            jax.block_until_ready(out)
+    else:
         out = fn()
         jax.block_until_ready(out)
+    if kernel_cb is not None:
+        kernel_cb(stage, backward, time.perf_counter() - t0, dense_bytes)
     return out
 
 
@@ -141,17 +158,19 @@ class PipelineProgram:
 def pipeline_forward(prog: PipelineProgram, params: Params,
                      inputs: Mapping[str, jax.Array],
                      plan: Optional[CompressionPlan] = None,
-                     use_kernel: bool = False,
+                     use_kernel: KernelPolicy = False,
                      compress_bwd: bool = True,
                      timing_cb: Optional[TimingCb] = None,
-                     trace: Optional[Any] = None
+                     trace: Optional[Any] = None,
+                     kernel_cb: Optional[KernelCb] = None
                      ) -> Tuple[jax.Array, List[Any], List[Dict[str, jax.Array]]]:
     """Forward sweep.  Returns (total_loss, vjp closures per stage, the
     per-stage received ext_acts — needed to key backward cotangents).
     ``timing_cb(stage, backward=False, seconds)`` receives each stage's
     measured host wall-clock (telemetry hook; None = no instrumentation);
     ``trace`` additionally records wall-clock ``compress.encode`` spans per
-    compressed boundary edge."""
+    compressed boundary edge; ``kernel_cb(stage, backward, seconds,
+    dense_bytes)`` receives each compressed edge's measured codec time."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
     stage_params = prog.split_params(params)
     stage_inputs = prog.split_inputs(inputs)
@@ -185,16 +204,19 @@ def pipeline_forward(prog: PipelineProgram, params: Params,
                 mailbox[(a, cj)] = _traced_compress(
                     trace, f"enc {a}->s{cj}", f"stage{si}", False, ratio,
                     lambda out=out, ratio=ratio: compress_for_edge(
-                        out, ratio, use_kernel, compress_bwd))
+                        out, ratio, use_kernel, compress_bwd),
+                    kernel_cb=kernel_cb, stage=si,
+                    dense_bytes=dense_payload_bytes(out))
     return total_loss, vjps, received
 
 
 def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
                       received: List[Dict[str, jax.Array]],
                       plan: Optional[CompressionPlan] = None,
-                      use_kernel: bool = False,
+                      use_kernel: KernelPolicy = False,
                       timing_cb: Optional[TimingCb] = None,
-                      trace: Optional[Any] = None) -> Dict[str, Any]:
+                      trace: Optional[Any] = None,
+                      kernel_cb: Optional[KernelCb] = None) -> Dict[str, Any]:
     """Backward sweep in reverse stage order; boundary gradients are
     compressed on the same links as their forward activations."""
     plan = plan or plan_none(prog.graph, prog.owner_stage)
@@ -228,7 +250,9 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
             g = _traced_compress(
                 trace, f"enc grad({a})", f"stage{si}", True, ratio,
                 lambda g=g, ratio=ratio: compress_for_edge(g, ratio,
-                                                           use_kernel))
+                                                           use_kernel),
+                kernel_cb=kernel_cb, stage=si,
+                dense_bytes=dense_payload_bytes(g))
             grad_mail[a] = grad_mail[a] + g if a in grad_mail else g
     return grads
 
@@ -236,23 +260,25 @@ def pipeline_backward(prog: PipelineProgram, vjps: List[Any],
 def pipeline_loss_and_grad(prog: PipelineProgram, params: Params,
                            inputs: Mapping[str, jax.Array],
                            plan: Optional[CompressionPlan] = None,
-                           use_kernel: bool = False,
+                           use_kernel: KernelPolicy = False,
                            timing_cb: Optional[TimingCb] = None,
-                           trace: Optional[Any] = None
+                           trace: Optional[Any] = None,
+                           kernel_cb: Optional[KernelCb] = None
                            ) -> Tuple[jax.Array, Dict[str, Any]]:
     """One RAD iteration (all stages, one micro-batch)."""
     loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
                                             use_kernel, timing_cb=timing_cb,
-                                            trace=trace)
+                                            trace=trace, kernel_cb=kernel_cb)
     grads = pipeline_backward(prog, vjps, received, plan, use_kernel,
-                              timing_cb=timing_cb, trace=trace)
+                              timing_cb=timing_cb, trace=trace,
+                              kernel_cb=kernel_cb)
     return loss, grads
 
 
 def pipeline_train_step(prog: PipelineProgram, params: Params,
                         micro_batches: Sequence[Mapping[str, jax.Array]],
                         plan: Optional[CompressionPlan] = None,
-                        use_kernel: bool = False
+                        use_kernel: KernelPolicy = False
                         ) -> Tuple[jax.Array, Dict[str, Any]]:
     """GPipe-style accumulation over micro-batches (paper Eq. 3 schedule;
     numerically the order does not matter, the executor models the timing)."""
@@ -286,9 +312,10 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
                               inputs: Mapping[str, jax.Array],
                               plan: CompressionPlan,
                               ef_state: Dict[str, jax.Array],
-                              use_kernel: bool = False,
+                              use_kernel: KernelPolicy = False,
                               timing_cb: Optional[TimingCb] = None,
-                              trace: Optional[Any] = None
+                              trace: Optional[Any] = None,
+                              kernel_cb: Optional[KernelCb] = None
                               ) -> Tuple[jax.Array, Dict[str, Any],
                                          Dict[str, jax.Array]]:
     """RAD iteration with error feedback on the BACKWARD (gradient) edges
@@ -305,7 +332,8 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
     # would sparsify the cotangent before EF sees it — double compression).
     loss, vjps, received = pipeline_forward(prog, params, inputs, plan,
                                             use_kernel, compress_bwd=False,
-                                            timing_cb=timing_cb, trace=trace)
+                                            timing_cb=timing_cb, trace=trace,
+                                            kernel_cb=kernel_cb)
     n_stages = len(prog.subdags)
     grad_mail: Dict[str, jax.Array] = {}
     grads: Dict[str, Any] = {}
@@ -331,7 +359,9 @@ def pipeline_loss_and_grad_ef(prog: PipelineProgram, params: Params,
                 sent = _traced_compress(
                     trace, f"enc ef({a})", f"stage{si}", True, ratio,
                     lambda corrected=corrected, k=k: topk_mask(
-                        corrected, k, use_kernel=use_kernel))
+                        corrected, k, use_kernel=use_kernel),
+                    kernel_cb=kernel_cb, stage=si,
+                    dense_bytes=dense_payload_bytes(g))
                 new_ef[a] = corrected - sent
                 g = sent
             grad_mail[a] = grad_mail[a] + g if a in grad_mail else g

@@ -325,8 +325,11 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
 
     ``verify=True`` (default) statically verifies the *winning*
     (schedule, plan) pair through :mod:`repro.check` — schedule coverage/
-    contiguity plus the AdaTopK break-even bounds; intermediate fixed-point
-    rounds are never verified (they are search states, not plans).
+    contiguity plus the AdaTopK break-even bounds and, when the model
+    carries calibrated kernel costs, encode profitability (no chosen ratio
+    may cost more codec time than the wire time it saves); intermediate
+    fixed-point rounds are never verified (they are search states, not
+    plans).
     """
     dense_model = (cost_model.with_cluster(cluster).with_plan(None)
                    if cost_model is not None
@@ -366,7 +369,8 @@ def schedule_joint(graph: OpGraph, profiles: Mapping[str, OpProfile],
                         alive=_resolve_subset(cluster, device_subset),
                         check_capacity=False)
         verify_plan(graph, profiles, best.plan,
-                    placement=best.schedule.placement)
+                    placement=best.schedule.placement,
+                    cost_model=best.cost_model)
     return best
 
 

@@ -52,8 +52,12 @@ MAD-filtered per-link transfer observations
 the calibrated :class:`EdgeCostModel` everywhere the broker prices anything:
 the detector's reference prediction (repriced in place, EWMA history kept),
 the re-planner's candidate costs, the joint co-planner, and the
-stream-vs-keep broker.  Hysteresis (``calibrate_hysteresis``) keeps a single
-noisy window from thrashing; when the calibrated pace of the *active* plan
+stream-vs-keep broker.  The same loop fits per-device codec costs
+(:meth:`TelemetryLog.kernel_samples` →
+:func:`repro.core.costmodel.fit_kernel_costs`) so the planner's
+``compress_seconds`` term prices encode time from measured ``KernelTiming``
+samples, not assumptions.  Hysteresis (``calibrate_hysteresis``) keeps a
+single noisy window from thrashing; when the calibrated pace of the *active* plan
 drifts more than ``replan_pace_margin`` past the pace it was installed at, a
 ``"calibration"`` epoch re-plans on the corrected costs (a re-plan that
 returns the same assignment is a no-op — no migration, no refill).
@@ -80,7 +84,8 @@ import numpy as np
 
 from repro.checkpoint import deserialize_state, serialize_state
 from repro.core.compression import CompressionPlan, plan_adatopk, plan_none
-from repro.core.costmodel import EdgeCostModel, fit_link_corrections
+from repro.core.costmodel import (EdgeCostModel, KernelCostModel,
+                                  fit_kernel_costs, fit_link_corrections)
 from repro.core.estimator import ClusterSpec, predict_step_times
 from repro.core.executor import (DecentralizedRuntime, TelemetrySink,
                                  pipeline_fill_seconds, simulate_iteration,
@@ -227,6 +232,7 @@ class ElasticController:
                  calibrate_hysteresis: float = 0.2,
                  replan_pace_margin: float = 0.25,
                  use_kernel: bool = False,
+                 kernel_costs: Optional[Mapping[int, KernelCostModel]] = None,
                  initial_alive: Optional[Sequence[int]] = None,
                  tracer: Optional[TraceRecorder] = None,
                  flight: Optional[FlightRecorder] = None,
@@ -271,6 +277,12 @@ class ElasticController:
         self.calibrate_hysteresis = float(calibrate_hysteresis)
         self.replan_pace_margin = float(replan_pace_margin)
         self.use_kernel = use_kernel
+        # ground-truth per-device codec costs for the simulator (what encode
+        # actually costs on each host); the broker's *belief* starts empty
+        # and is fitted from KernelTiming telemetry by _calibrate — the same
+        # truth-vs-belief split as compute slowdowns and link corrections
+        self.kernel_costs: Dict[int, KernelCostModel] = dict(kernel_costs or {})
+        self.kernel_cost_belief: Dict[int, KernelCostModel] = {}
         # static verification (repro.check) of every plan this controller
         # installs: schedules at install time, re-plans inside replan(),
         # compression plans against the installed placement.  verify=False
@@ -331,7 +343,8 @@ class ElasticController:
                              believed if believed is not None
                              else self.believed_cluster(),
                              plan if plan is not None else self.plan,
-                             self.link_corrections)
+                             self.link_corrections,
+                             self.kernel_cost_belief)
 
     def true_cluster(self) -> ClusterSpec:
         """Ground truth for the simulator: scripted compute and link
@@ -350,7 +363,8 @@ class ElasticController:
                             self.joint_ratio,
                             cost_model=EdgeCostModel(
                                 graph, profiles, cluster, None,
-                                self.link_corrections))
+                                self.link_corrections,
+                                self.kernel_cost_belief))
 
     # ----------------------------------------------------------- epochs ----
     def _install_schedule(self, cause: str, events: List[ChurnEvent],
@@ -382,7 +396,7 @@ class ElasticController:
                     device_subset=self.membership.alive,
                     cost_model=EdgeCostModel(
                         self.graph, self.profiles, believed, None,
-                        self.link_corrections),
+                        self.link_corrections, self.kernel_cost_belief),
                     verify=self.verify).schedule
             else:
                 self.schedule = schedule_opfence(
@@ -395,7 +409,8 @@ class ElasticController:
         if self.verify:
             from repro.check.costs import verify_plan
             verify_plan(self.graph, self.profiles, self.plan,
-                        placement=placement)
+                        placement=placement,
+                        cost_model=self.believed_model(believed, self.plan))
         migrate_s = migration.seconds if migration is not None else 0.0
         if migrate_seconds is not None:   # caller-computed blocking cost
             migrate_s = migrate_seconds
@@ -813,14 +828,20 @@ class ElasticController:
             # zero origin and replayed per step at the step's clock offset —
             # the simulator itself runs identically with tracing on or off
             span_rec = TraceRecorder() if tracing else None
+            # ground-truth codec pricing: the sim charges what encode really
+            # costs on each host (kernel_costs), never the broker's belief
+            true_model = EdgeCostModel(
+                self.graph, self.profiles, true_cl, self.plan,
+                kernel_costs=self.kernel_costs) if self.kernel_costs else None
             sim = simulate_iteration(self.graph, self.profiles, self.schedule,
                                      true_cl, self.plan,
                                      n_micro=self.n_micro, telemetry=sink,
-                                     trace=span_rec)
+                                     trace=span_rec, cost_model=true_model)
             self._obs_cache = (key, sim.iteration_time, sink.samples,
-                               sink.link_samples,
+                               sink.link_samples, sink.kernel_samples,
                                tuple(span_rec.events()) if span_rec else ())
-        _, sim_time, samples, link_samples, spans = self._obs_cache
+        _, sim_time, samples, link_samples, kernel_samples, spans = \
+            self._obs_cache
         if tracing and spans:
             # (step, epoch) identifies one execution attempt: after a
             # rollback the same data step re-executes under the next epoch,
@@ -830,6 +851,9 @@ class ElasticController:
                                extra_args={"step": step,
                                            "epoch": len(self.epoch_records)})
         self.telemetry_bus.record_step(samples, step=step)
+        # codec samples are device-local compute — unaffected by stream
+        # contention on the wire, so they record even while migrating
+        self.telemetry_bus.record_kernel_step(kernel_samples, step=step)
         if self._migrating is None:
             # link observations taken while a background stream contends on
             # the wire measure the (transient) shared bandwidth, not the
@@ -896,8 +920,8 @@ class ElasticController:
         return self._calibrate()
 
     def _calibrate(self) -> bool:
-        """Fit per-link corrections from the telemetry window and fold the
-        survivors into the broker's belief.
+        """Fit per-link corrections and per-device codec costs from the
+        telemetry window and fold the survivors into the broker's belief.
 
         The fit always runs against the *uncorrected* base spec
         (``base_cluster``) — corrections are absolute and replace what is
@@ -917,9 +941,12 @@ class ElasticController:
         """
         samples = self.telemetry.link_samples(
             min_steps=self.calibrate_min_samples)
-        if not samples:
+        kernel_window = self.telemetry.kernel_samples(
+            min_steps=self.calibrate_min_samples)
+        if not samples and not kernel_window:
             return False
-        fitted = fit_link_corrections(samples, self.base_cluster)
+        fitted = fit_link_corrections(samples, self.base_cluster) \
+            if samples else {}
         changed = False
         verdicts: Dict[Tuple[int, int], str] = {}
         for lk in sorted(fitted):
@@ -934,6 +961,17 @@ class ElasticController:
             else:
                 self.link_corrections[lk] = new
                 verdicts[lk] = "adopted"
+            changed = True
+        # per-device codec costs, same hysteresis discipline on the fitted
+        # throughput: the first fit always installs (belief moves from "free"
+        # to measured), later fits only when they drift past the band
+        for dev, kc in sorted(fit_kernel_costs(kernel_window).items()):
+            old_kc = self.kernel_cost_belief.get(dev)
+            if old_kc is not None and abs(
+                    kc.bytes_per_second - old_kc.bytes_per_second) \
+                    <= self.calibrate_hysteresis * old_kc.bytes_per_second:
+                continue
+            self.kernel_cost_belief[dev] = kc
             changed = True
         installed_pace_before = self._installed_pace
         diverged = False
@@ -958,6 +996,9 @@ class ElasticController:
             for lk, v in sorted(self.link_corrections.items()):
                 self.metrics.gauge("link_correction",
                                    link=f"{lk[0]}->{lk[1]}").set(float(v))
+            for dev, kc in sorted(self.kernel_cost_belief.items()):
+                self.metrics.gauge("kernel_bytes_per_second", node=dev).set(
+                    float(kc.bytes_per_second))
         if self.flight is not None:
             self.flight.log(CalibrationRecord(
                 step=self._cur_step(), clock=self.clock,

@@ -34,6 +34,15 @@ planner's α–β model against the wire the traffic actually rode.  That is the
 observation half of the closed planning loop; the controller owns the fit,
 hysteresis, and re-plan trigger.
 
+The same machinery carries **per-device codec** observations
+(:class:`repro.core.executor.KernelTiming`): per step, each device's encode
+invocations fold into one ``(dense_bytes, seconds)`` total, and
+:meth:`TelemetryLog.kernel_samples` reports the MAD-filtered window of
+per-invocation means — the input
+:func:`repro.core.costmodel.fit_kernel_costs` needs to price
+``EdgeCostModel.compress_seconds`` from what the kernels actually cost on
+this host, closing the planner's encode-vs-wire profitability loop.
+
 Since the observability layer landed, ``TelemetryLog`` is one subscriber on
 the controller's :class:`repro.obs.bus.TelemetryBus` rather than the sole
 consumer of executor samples: the bus fans each ``StepTiming``/``LinkTiming``
@@ -48,7 +57,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.executor import LinkTiming, StepTiming
+from repro.core.executor import KernelTiming, LinkTiming, StepTiming
 
 
 def _robust_window_stat(values: Sequence[float], mad_k: float) -> float:
@@ -76,6 +85,20 @@ class _NodeSeries:
 
     steps: List[int] = dataclasses.field(default_factory=list)
     seconds: List[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _KernelSeries:
+    """Per-device codec history: per observed step, the total dense payload
+    bytes the device's encode kernels read, the total seconds they took, and
+    the invocation count.  As with links, the calibration pair reported per
+    step is the per-invocation *mean* ``(B/K, S/K)`` — exact under the
+    affine ``α + dense_bytes/bw`` kernel cost model."""
+
+    steps: List[int] = dataclasses.field(default_factory=list)
+    nbytes: List[float] = dataclasses.field(default_factory=list)
+    seconds: List[float] = dataclasses.field(default_factory=list)
+    counts: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -115,8 +138,10 @@ class TelemetryLog:
         self._acc: Dict[Tuple[int, int], List] = {}
         self._series: Dict[int, _NodeSeries] = {}
         self._links: Dict[Tuple[int, int], _LinkSeries] = {}
+        self._kernels: Dict[int, _KernelSeries] = {}
         self.n_samples = 0
         self.n_link_samples = 0
+        self.n_kernel_samples = 0
 
     # ------------------------------------------------------------ recording
     def record(self, sample: StepTiming) -> None:
@@ -159,6 +184,33 @@ class TelemetryLog:
                          step: int) -> None:
         for s in samples:
             self.record_link(dataclasses.replace(s, step=step))
+
+    def record_kernel(self, sample: KernelTiming) -> None:
+        """Fold one per-invocation codec observation into the device's
+        per-step (dense bytes, seconds) totals."""
+        key = int(sample.node)
+        step = int(sample.step)
+        series = self._kernels.setdefault(key, _KernelSeries())
+        if series.steps and series.steps[-1] == step:
+            series.nbytes[-1] += float(sample.nbytes)
+            series.seconds[-1] += float(sample.seconds)
+            series.counts[-1] += 1
+        else:
+            series.steps.append(step)
+            series.nbytes.append(float(sample.nbytes))
+            series.seconds.append(float(sample.seconds))
+            series.counts.append(1)
+            if len(series.steps) > self.history_steps:
+                del series.steps[:-self.history_steps]
+                del series.nbytes[:-self.history_steps]
+                del series.seconds[:-self.history_steps]
+                del series.counts[:-self.history_steps]
+        self.n_kernel_samples += 1
+
+    def record_kernel_step(self, samples: Iterable[KernelTiming],
+                           step: int) -> None:
+        for s in samples:
+            self.record_kernel(dataclasses.replace(s, step=step))
 
     def _fold(self, key: Tuple[int, int], slot: List) -> None:
         """Fold the (node, step) accumulator into the node's series: total
@@ -228,6 +280,34 @@ class TelemetryLog:
             out[key] = pairs
         return out
 
+    def kernel_samples(self, min_steps: int = 3
+                       ) -> Dict[int, List[Tuple[float, float]]]:
+        """MAD-filtered ``(dense_bytes, seconds)`` codec samples per device
+        over the aggregation window — the calibration input of
+        :func:`repro.core.costmodel.fit_kernel_costs`.
+
+        Mirrors :meth:`link_samples` exactly: outliers are rejected on the
+        per-byte pace, and devices with fewer than ``min_steps`` window
+        entries are withheld so a one-step spike never becomes a fitted cost.
+        """
+        out: Dict[int, List[Tuple[float, float]]] = {}
+        for key, series in self._kernels.items():
+            nb = series.nbytes[-self.window:]
+            sec = series.seconds[-self.window:]
+            cnt = series.counts[-self.window:]
+            if len(nb) < max(1, int(min_steps)):
+                continue
+            pairs = [(b / k, s / k) for b, s, k in zip(nb, sec, cnt)]
+            if len(pairs) >= 3:
+                pace = np.array([s / max(b, 1.0) for b, s in pairs])
+                med = float(np.median(pace))
+                mad = float(np.median(np.abs(pace - med)))
+                keep = np.abs(pace - med) <= self.mad_k * mad
+                if np.any(keep):
+                    pairs = [p for p, k in zip(pairs, keep) if k]
+            out[key] = pairs
+        return out
+
     def latest_step(self) -> Optional[int]:
         steps = [s.steps[-1] for s in self._series.values() if s.steps]
         return max(steps) if steps else None
@@ -241,5 +321,7 @@ class TelemetryLog:
         self._acc.clear()
         self._series.clear()
         self._links.clear()
+        self._kernels.clear()
         self.n_samples = 0
         self.n_link_samples = 0
+        self.n_kernel_samples = 0

@@ -20,6 +20,14 @@ data-dependent permutation, so we rethink the algorithm (DESIGN.md §2):
 around the same threshold search — one extra VMEM-resident add/sub, no
 extra HBM round-trip.
 
+``encode_topk`` / ``ef_encode_topk`` / ``decode_topk`` are the fused *wire*
+kernels: threshold search + mask-bitmap emission + packed-value compaction
+in one pallas_call (the "mask" encoding `wire_bytes` prices).  Unlike the
+dense kernels they are tie-capped — the wire has exactly k slots per block,
+so among threshold ties the first ``k - n_above`` in index order win.  The
+packed-value lane is padded to a multiple of 128 inside the kernel (TPU
+lane width); wrappers slice it back to k.
+
 Kernels are validated in interpret mode against :mod:`repro.kernels.ref`
 (exact equality — same selection set by construction).
 """
@@ -36,6 +44,7 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = 4096        # elements per grid step (fits VMEM many times
                             # over; multiple of 8*128 VPU tiles)
 _SEARCH_BITS = 31           # full int32 positive range
+_LANE = 128                 # TPU lane width: packed-value capacity rounding
 
 
 def _kth_threshold_bits(mag_bits: jax.Array, k: jax.Array) -> jax.Array:
@@ -59,6 +68,18 @@ def _kth_threshold_bits(mag_bits: jax.Array, k: jax.Array) -> jax.Array:
     return lo
 
 
+def _force_rounding(x: jax.Array) -> jax.Array:
+    """Pin storage-dtype rounding of a computed value.  XLA on CPU computes
+    bf16 arithmetic in f32 and may fuse away the round-trip on the path into
+    the bitcast, so (x + r) inside a kernel can carry more precision than the
+    eagerly-materialized oracle value — this makes selection bit-exact."""
+    if x.dtype == jnp.bfloat16:
+        return jax.lax.reduce_precision(x, 8, 7)
+    if x.dtype == jnp.float16:
+        return jax.lax.reduce_precision(x, 5, 10)
+    return x
+
+
 def _topk_block_kernel(x_ref, o_ref, *, k: int):
     x = x_ref[...]
     mag = jnp.abs(x.astype(jnp.float32))
@@ -69,7 +90,7 @@ def _topk_block_kernel(x_ref, o_ref, *, k: int):
 
 
 def _ef_topk_block_kernel(x_ref, r_ref, sent_ref, newr_ref, *, k: int):
-    corrected = x_ref[...] + r_ref[...]
+    corrected = _force_rounding(x_ref[...] + r_ref[...])
     mag = jnp.abs(corrected.astype(jnp.float32))
     bits = jax.lax.bitcast_convert_type(mag, jnp.int32)
     thr = _kth_threshold_bits(bits, jnp.int32(k))
@@ -127,3 +148,142 @@ def ef_topk(x: jax.Array, residual: jax.Array, k_per_block: int,
     sent, newr = fn(tiles, rtiles)
     return (sent.reshape(-1)[:n].reshape(shape),
             newr.reshape(-1)[:n].reshape(shape))
+
+
+# ---------------------------------------------------------------------------
+# Fused wire-encode / decode kernels
+# ---------------------------------------------------------------------------
+
+def _keep_capped_block(x: jax.Array, k: int):
+    """Tie-capped keep-mask for one (1, B) tile: exactly k kept.  Everything
+    strictly above the k-th largest bit pattern, plus the first
+    ``k - n_above`` threshold ties in index order."""
+    bits = jax.lax.bitcast_convert_type(
+        jnp.abs(x.astype(jnp.float32)), jnp.int32)
+    thr = _kth_threshold_bits(bits, jnp.int32(k))
+    above = bits > thr
+    n_above = jnp.sum(above.astype(jnp.int32))
+    tie = bits == thr
+    tie_rank = jnp.cumsum(tie.astype(jnp.int32), axis=1)
+    return above | (tie & (tie_rank <= (k - n_above)))
+
+
+def _emit_encoded(x: jax.Array, keep: jax.Array, v_ref, m_ref, *, kp: int):
+    """Write bitmap words (LSB-first) and index-order packed values."""
+    B = x.shape[1]
+    w = keep.reshape(B // 32, 32).astype(jnp.uint32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (B // 32, 32), 1)
+    m_ref[...] = jnp.sum(w << shifts, axis=1,
+                         dtype=jnp.uint32).reshape(1, B // 32)
+    pos = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    safe = jnp.where(keep, pos, kp).reshape(-1)  # kp is out of range: dropped
+    packed = jnp.zeros((kp,), x.dtype).at[safe].set(x.reshape(-1),
+                                                    mode="drop")
+    v_ref[...] = packed.reshape(1, kp)
+
+
+def _encode_block_kernel(x_ref, v_ref, m_ref, *, k: int, kp: int):
+    x = x_ref[...]
+    _emit_encoded(x, _keep_capped_block(x, k), v_ref, m_ref, kp=kp)
+
+
+def _ef_encode_block_kernel(x_ref, r_ref, v_ref, m_ref, newr_ref, *,
+                            k: int, kp: int):
+    corrected = _force_rounding(x_ref[...] + r_ref[...])
+    keep = _keep_capped_block(corrected, k)
+    _emit_encoded(corrected, keep, v_ref, m_ref, kp=kp)
+    newr_ref[...] = jnp.where(keep, jnp.zeros_like(corrected), corrected)
+
+
+def _decode_block_kernel(v_ref, m_ref, o_ref, *, kp: int):
+    words = m_ref[...].reshape(-1)
+    W = words.shape[0]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (W, 32), 1)
+    keep = ((words[:, None] >> shifts) & jnp.uint32(1)
+            ).astype(bool).reshape(1, W * 32)
+    pos = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    idx = jnp.clip(pos, 0, kp - 1).reshape(-1)
+    vals = v_ref[...].reshape(-1)
+    dense = jnp.where(keep, vals[idx].reshape(1, W * 32), 0)
+    o_ref[...] = dense.astype(o_ref.dtype)
+
+
+def _lane_pad(k: int) -> int:
+    return -(-k // _LANE) * _LANE
+
+
+def encode_topk(x: jax.Array, k_per_block: int, block: int = DEFAULT_BLOCK,
+                interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Fused wire encode: (values (nb, k) in index order, bitmap (nb, B/32)
+    uint32) in one pallas_call per tile.  Exactly k slots per block."""
+    if x.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+        raise TypeError(f"unsupported dtype {x.dtype}")
+    if block % 32:
+        raise ValueError(f"block must be a multiple of 32, got {block}")
+    k = int(min(max(k_per_block, 1), block))
+    kp = _lane_pad(k)
+    tiles, _, _ = _prep(x, block)
+    nb = tiles.shape[0]
+    W = block // 32
+    values, bitmap = pl.pallas_call(
+        functools.partial(_encode_block_kernel, k=k, kp=kp),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, kp), lambda i: (i, 0)),
+                   pl.BlockSpec((1, W), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, kp), tiles.dtype),
+                   jax.ShapeDtypeStruct((nb, W), jnp.uint32)],
+        interpret=interpret,
+    )(tiles)
+    return values[:, :k], bitmap
+
+
+def ef_encode_topk(x: jax.Array, residual: jax.Array, k_per_block: int,
+                   block: int = DEFAULT_BLOCK, interpret: bool = True
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused error-feedback wire encode: compress (x + residual) and emit
+    (values, bitmap, new_residual) — residual update in the same kernel."""
+    if block % 32:
+        raise ValueError(f"block must be a multiple of 32, got {block}")
+    k = int(min(max(k_per_block, 1), block))
+    kp = _lane_pad(k)
+    tiles, n, shape = _prep(x, block)
+    rtiles, _, _ = _prep(residual, block)
+    nb = tiles.shape[0]
+    W = block // 32
+    in_spec = pl.BlockSpec((1, block), lambda i: (i, 0))
+    values, bitmap, newr = pl.pallas_call(
+        functools.partial(_ef_encode_block_kernel, k=k, kp=kp),
+        grid=(nb,),
+        in_specs=[in_spec, in_spec],
+        out_specs=[pl.BlockSpec((1, kp), lambda i: (i, 0)),
+                   pl.BlockSpec((1, W), lambda i: (i, 0)),
+                   in_spec],
+        out_shape=[jax.ShapeDtypeStruct((nb, kp), tiles.dtype),
+                   jax.ShapeDtypeStruct((nb, W), jnp.uint32),
+                   jax.ShapeDtypeStruct((nb, block), tiles.dtype)],
+        interpret=interpret,
+    )(tiles, rtiles)
+    return values[:, :k], bitmap, newr.reshape(-1)[:n].reshape(shape)
+
+
+def decode_topk(values: jax.Array, bitmap: jax.Array,
+                shape: Tuple[int, ...], interpret: bool = True) -> jax.Array:
+    """Inverse of :func:`encode_topk`: dense tensor of ``shape``."""
+    nb, k = values.shape
+    W = bitmap.shape[1]
+    block = W * 32
+    kp = _lane_pad(k)
+    if kp != k:
+        values = jnp.pad(values, ((0, 0), (0, kp - k)))
+    dense = pl.pallas_call(
+        functools.partial(_decode_block_kernel, kp=kp),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((1, kp), lambda i: (i, 0)),
+                  pl.BlockSpec((1, W), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, block), values.dtype),
+        interpret=interpret,
+    )(values, bitmap)
+    n = int(np.prod(shape))
+    return dense.reshape(-1)[:n].reshape(shape)

@@ -6,8 +6,9 @@ wants the *same* StepTiming/LinkTiming stream (for per-link wire-byte
 metrics, trace instants, user sinks) without the executor knowing who
 listens — so the stream becomes a bus.  Anything implementing the
 ``TelemetrySink`` protocol (``record(StepTiming)`` and optionally
-``record_link(LinkTiming)``) subscribes; the bus itself implements the
-protocol, so it drops in wherever a sink was passed before.
+``record_link(LinkTiming)`` / ``record_kernel(KernelTiming)``) subscribes;
+the bus itself implements the protocol, so it drops in wherever a sink was
+passed before.
 
 Parity contract (tested): a TelemetryLog fed through the bus reports
 bit-identical ``node_step_times()`` / ``link_samples()`` to one fed
@@ -54,6 +55,12 @@ class TelemetryBus:
             if rl is not None:
                 rl(sample)
 
+    def record_kernel(self, sample) -> None:
+        for s in self._subs:
+            rk = getattr(s, "record_kernel", None)
+            if rk is not None:
+                rk(sample)
+
     # ------------------------------------------------- bulk (controller path)
     def record_step(self, samples: Iterable[Any], step: int) -> None:
         for s in samples:
@@ -62,6 +69,10 @@ class TelemetryBus:
     def record_link_step(self, samples: Iterable[Any], step: int) -> None:
         for s in samples:
             self.record_link(dataclasses.replace(s, step=step))
+
+    def record_kernel_step(self, samples: Iterable[Any], step: int) -> None:
+        for s in samples:
+            self.record_kernel(dataclasses.replace(s, step=step))
 
 
 class MetricsTelemetrySink:

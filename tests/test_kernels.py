@@ -1,12 +1,19 @@
 """Pallas Top-K kernels vs the pure-jnp oracle: shape/dtype/k sweeps in
-interpret mode (deliverable c — per-kernel allclose)."""
+interpret mode (deliverable c — per-kernel allclose), plus the fused
+wire-encode/decode round trip and the kernel dispatch policy.
+
+Property tests run only when hypothesis is installed; the parametrized
+parity sweeps always run."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels import topk_compress as tk
@@ -28,17 +35,6 @@ def test_blockwise_topk_exact_vs_oracle(shape, dtype, ratio):
     kpb = max(1, (n // ratio) // max(1, -(-n // block)) or 1)
     got = tk.blockwise_topk_mask(x, kpb, block=block, interpret=True)
     want = ref.blockwise_topk_mask_ref(x, kpb, block=block)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-
-@given(st.integers(8, 2000), st.integers(1, 64),
-       st.sampled_from([128, 256, 512]))
-@settings(max_examples=25, deadline=None)
-def test_kernel_oracle_property(n, k, block):
-    x = jnp.asarray(np.random.default_rng(n * 7 + k).standard_normal(n),
-                    jnp.float32)
-    got = tk.blockwise_topk_mask(x, k, block=block, interpret=True)
-    want = ref.blockwise_topk_mask_ref(x, k, block=block)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
@@ -74,3 +70,168 @@ def test_zero_input_keeps_everything_zero():
     x = jnp.zeros(1024, jnp.float32)
     y = tk.blockwise_topk_mask(x, 4, block=256, interpret=True)
     np.testing.assert_array_equal(np.asarray(y), np.zeros(1024))
+
+
+# ------------------------------------------------- fused encode / decode --
+
+ENC_CASES = [((4096,), 11), ((5000,), 13), ((33, 257), 17), ((64,), 9)]
+
+
+@pytest.mark.parametrize("shape,kpb", ENC_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_encode_kernel_matches_oracle(shape, kpb, dtype):
+    rng = np.random.default_rng(hash((shape, kpb)) % 2**32)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+    for block in (32, 512):
+        v_k, m_k = tk.encode_topk(x, kpb, block=block, interpret=True)
+        v_r, m_r = ref.encode_topk_ref(x, kpb, block=block)
+        np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+        np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+
+
+@pytest.mark.parametrize("shape,kpb", ENC_CASES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ef_encode_kernel_matches_oracle(shape, kpb, dtype):
+    rng = np.random.default_rng(hash((shape, kpb, 1)) % 2**32)
+    x = jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+    r = jnp.asarray(rng.standard_normal(shape) * 0.1, dtype=dtype)
+    v_k, m_k, nr_k = tk.ef_encode_topk(x, r, kpb, block=512, interpret=True)
+    v_r, m_r, nr_r = ref.ef_encode_topk_ref(x, r, kpb, block=512)
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+    np.testing.assert_array_equal(np.asarray(nr_k), np.asarray(nr_r))
+
+
+@pytest.mark.parametrize("shape,kpb", ENC_CASES)
+def test_encode_decode_round_trip(shape, kpb):
+    """decode(encode(x)) reconstructs exactly the kept elements — i.e. the
+    tie-capped keep set as a dense tensor — for kernel and oracle alike."""
+    rng = np.random.default_rng(hash(shape) % 2**32)
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    v, m = tk.encode_topk(x, kpb, block=512, interpret=True)
+    dense_k = tk.decode_topk(v, m, x.shape, interpret=True)
+    dense_r = ref.decode_topk_ref(*ref.encode_topk_ref(x, kpb, block=512),
+                                  shape=x.shape)
+    np.testing.assert_array_equal(np.asarray(dense_k), np.asarray(dense_r))
+    # every reconstructed nonzero matches the input at its position
+    got = np.asarray(dense_k)
+    want = np.asarray(x)
+    nz = got != 0
+    np.testing.assert_array_equal(got[nz], want[nz])
+
+
+def test_encode_all_zeros_and_ties():
+    # all-zeros: exactly kpb slots per block kept (wire capacity), all zero
+    x0 = jnp.zeros(256, jnp.float32)
+    v, m = tk.encode_topk(x0, 8, block=32, interpret=True)
+    assert v.shape == (8, 8)
+    np.testing.assert_array_equal(np.asarray(v), np.zeros((8, 8)))
+    assert int(np.sum([bin(w).count("1") for w in np.asarray(m).ravel()])) \
+        == 8 * 8
+    rt = tk.decode_topk(v, m, x0.shape, interpret=True)
+    np.testing.assert_array_equal(np.asarray(rt), np.zeros(256))
+    # all-ones (every element ties at the threshold): capped at exactly kpb
+    x1 = jnp.ones(256, jnp.float32)
+    v1, m1 = tk.encode_topk(x1, 7, block=32, interpret=True)
+    v1r, m1r = ref.encode_topk_ref(x1, 7, block=32)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v1r))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m1r))
+    rt1 = np.asarray(tk.decode_topk(v1, m1, x1.shape, interpret=True))
+    assert int(np.sum(rt1 != 0)) == 7 * 8
+    # ties keep the *first* k - n_above in index order
+    assert np.all(rt1.reshape(8, 32)[:, :7] == 1.0)
+
+
+def test_encode_capped_vs_mask_superset():
+    """The dense kernels keep a tie-superset; the encode kernels cap at the
+    wire capacity.  On a tie-heavy tensor the decode output must be a
+    subset of the dense mask with exactly kpb survivors per block."""
+    x = jnp.asarray(np.repeat([3.0, 1.0], 16), jnp.float32)   # 16-way ties
+    mask = np.asarray(tk.blockwise_topk_mask(x, 4, block=32, interpret=True))
+    v, m = tk.encode_topk(x, 4, block=32, interpret=True)
+    enc = np.asarray(tk.decode_topk(v, m, x.shape, interpret=True))
+    assert int(np.sum(mask != 0)) == 16      # superset: all 3.0-ties kept
+    assert int(np.sum(enc != 0)) == 4        # capped at wire capacity
+    assert np.all(mask[enc != 0] == enc[enc != 0])
+
+
+def test_keep_capped_is_stable_topk():
+    """_keep_capped (the executable spec) agrees with the stable-top_k
+    formulation encode_topk_ref ships — including tie-heavy rows."""
+    rng = np.random.default_rng(11)
+    for row in [rng.standard_normal((4, 64)),
+                np.repeat(rng.standard_normal((4, 8)), 8, axis=1),
+                np.zeros((4, 64))]:
+        tiles = jnp.asarray(row, jnp.float32)
+        for k in (1, 5, 63):
+            keep = np.asarray(ref._keep_capped(ref._mag_bits(tiles), k))
+            idx = np.sort(np.asarray(
+                jax.lax.top_k(jnp.abs(tiles), k)[1]), axis=1)
+            want = np.zeros(keep.shape, bool)
+            np.put_along_axis(want, idx, True, axis=1)
+            np.testing.assert_array_equal(keep, want)
+
+
+# --------------------------------------------------------- dispatch policy --
+
+def test_resolve_policy():
+    assert ops.resolve_policy(False) == "global"
+    assert ops.resolve_policy(None) == "global"
+    assert ops.resolve_policy("off") == "global"
+    on_tpu = jax.default_backend() == "tpu"
+    assert ops.resolve_policy("auto") == ("pallas" if on_tpu else "xla")
+    assert ops.resolve_policy(True) == ("pallas" if on_tpu else "interpret")
+    assert ops.resolve_policy("force") == ops.resolve_policy(True)
+    with pytest.raises(ValueError):
+        ops.resolve_policy("warp-speed")
+
+
+def test_codec_modes_agree():
+    """xla and interpret codec paths are bit-identical (the policy only
+    changes where the math runs, never what it computes)."""
+    x = jnp.asarray(np.random.default_rng(5).standard_normal(5000),
+                    jnp.float32)
+    a = ops.codec_topk_mask(x, 50, mode="xla")
+    b = ops.codec_topk_mask(x, 50, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    r = jnp.asarray(np.random.default_rng(6).standard_normal(5000) * 0.1,
+                    jnp.float32)
+    sa, ra = ops.codec_ef_topk(x, r, 50, mode="xla")
+    sb, rb = ops.codec_ef_topk(x, r, 50, mode="interpret")
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+    np.testing.assert_array_equal(np.asarray(ra), np.asarray(rb))
+
+
+# ------------------------------------------------------- property tests --
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(8, 2000), st.integers(1, 64),
+           st.sampled_from([128, 256, 512]))
+    @settings(max_examples=25, deadline=None)
+    def test_kernel_oracle_property(n, k, block):
+        x = jnp.asarray(np.random.default_rng(n * 7 + k).standard_normal(n),
+                        jnp.float32)
+        got = tk.blockwise_topk_mask(x, k, block=block, interpret=True)
+        want = ref.blockwise_topk_mask_ref(x, k, block=block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(st.integers(8, 2000), st.integers(1, 48),
+           st.sampled_from([32, 128, 512]),
+           st.sampled_from(["normal", "zeros", "ties"]))
+    @settings(max_examples=25, deadline=None)
+    def test_encode_round_trip_property(n, k, block, regime):
+        rng = np.random.default_rng(n * 13 + k)
+        if regime == "zeros":
+            x = jnp.zeros(n, jnp.float32)
+        elif regime == "ties":
+            x = jnp.asarray(rng.integers(0, 3, n).astype(np.float32))
+        else:
+            x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        v_k, m_k = tk.encode_topk(x, k, block=block, interpret=True)
+        v_r, m_r = ref.encode_topk_ref(x, k, block=block)
+        np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+        np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+        rt = tk.decode_topk(v_k, m_k, x.shape, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(rt),
+            np.asarray(ref.decode_topk_ref(v_r, m_r, x.shape)))
