@@ -65,6 +65,9 @@ def main() -> None:
                     help="joint planning bench workload (tiny = CI smoke, "
                          "hetero = the mixed-width chain the perf baseline "
                          "is pinned on)")
+    ap.add_argument("--serving-profile", default="geo",
+                    choices=["geo", "tiny"],
+                    help="swarm serving bench workload (tiny = CI smoke)")
     ap.add_argument("--trace", action="store_true",
                     help="record span traces + the broker flight recorder "
                          "on supporting benches; writes TRACE_*/FLIGHT_* "
@@ -75,7 +78,7 @@ def main() -> None:
 
     from . import (ablation_microbatch, churn, convergence, gpu_table,
                    joint_planning, kernel_bench, latency, ratio_sweep,
-                   roofline_table, speedup_table)
+                   roofline_table, serving, speedup_table)
 
     benches = {
         "churn_elastic": lambda: churn.run(
@@ -90,6 +93,8 @@ def main() -> None:
         "fig11_ratio": lambda: ratio_sweep.run(csv_writer),
         "speedup_headline": lambda: speedup_table.run(csv_writer),
         "kernel_topk": lambda: kernel_bench.run(csv_writer),
+        "serving_swarm": lambda: serving.run(
+            csv_writer, profile=args.serving_profile, trace=args.trace),
         "ablation_nmicro": lambda: ablation_microbatch.run(csv_writer),
         "roofline": lambda: roofline_table.run(csv_writer),
     }

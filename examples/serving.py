@@ -1,16 +1,53 @@
-"""Batched serving demo: prefill a batch of prompts, decode with the KV
-cache, report tokens/s.
+"""Minimal single-host swarm-serving example: stage-shard a tiny decoder
+over a simulated 4-device LAN, replay a Poisson request trace through the
+continuous-batching runtime, and print the closed-loop report — then do it
+again with a scripted mid-session failure to show the router re-routing
+around the dead replica with bit-identical output.
 
-    PYTHONPATH=src python examples/serving.py [--arch zamba2-7b]
+    PYTHONPATH=src python examples/serving.py
+
+Everything runs in one process on one host: the "devices" are rows of a
+simulated cluster spec; the model math is real JAX.  See docs/serving.md
+for the full guide and ``python -m repro.launch.serve`` for the CLI.
 """
-import subprocess
-import sys
+import jax
+
+from repro.configs.base import ModelCfg
+from repro.core.network import homogeneous_lan
+from repro.elastic.membership import ChurnTrace, MembershipView
+from repro.models import causal_lm
+from repro.serving import (ServingCostModel, ServingRuntime,
+                           churn_trace_for, derive_midsession_failure,
+                           plan_serving, poisson_trace)
+
+
+def main() -> None:
+    cfg = ModelCfg(name="tiny", family="dense", n_layers=4, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=97)
+    params = causal_lm.init(cfg, jax.random.PRNGKey(0))
+    cluster = homogeneous_lan(4)
+    costs = ServingCostModel(cfg, cluster)
+    plan = plan_serving(cfg, costs, alive=[0, 1, 2, 3], n_stages=2,
+                        cache_len=64, max_batch=3)
+    print(plan.describe())
+
+    requests = poisson_trace(5, rate=200.0, vocab=cfg.vocab,
+                             gen_len=(24, 32), seed=3)
+
+    # leg 1: no churn
+    view = MembershipView(4, ChurnTrace(()), lease_s=1e-5)
+    report = ServingRuntime(cfg, params, plan, view).run(list(requests))
+    print("no churn:", report.to_dict())
+
+    # leg 2: same offered load, one stage replica dies mid-session
+    victim, at, _, _ = derive_midsession_failure(cfg, params, plan,
+                                                 requests, 4)
+    print(f"killing device {victim} at t={at:.4f}s (mid-session)")
+    view = MembershipView(4, churn_trace_for(victim, at), lease_s=1e-5)
+    report = ServingRuntime(cfg, params, plan, view).run(list(requests))
+    print("with churn:", report.to_dict())
+    assert report.all_completed and report.n_reroutes >= 1
+
 
 if __name__ == "__main__":
-    arch = "llama3-8b"
-    if "--arch" in sys.argv:
-        arch = sys.argv[sys.argv.index("--arch") + 1]
-    raise SystemExit(subprocess.call(
-        [sys.executable, "-m", "repro.launch.serve",
-         "--arch", arch, "--size", "smoke",
-         "--batch", "4", "--prompt-len", "16", "--gen", "24"]))
+    main()

@@ -10,6 +10,8 @@ Modes (composable; no flags runs ``--all-configs --lint``):
 * ``--lint`` — the repo-custom AST lint over ``src/repro/``
   (``--lint-json PATH`` additionally writes the findings as JSON for
   the CI artifact).
+* ``--docs`` — relative-link check over README/ROADMAP/docs/ markdown
+  (jax-free; see :mod:`repro.check.docs`).
 * ``--trace PATH`` — happens-before check on a recorded span log
   (``.jsonl`` or Chrome-trace ``.json``), repeatable.
 * ``--bench PATH`` — schema-validate a BENCH result/baseline JSON
@@ -96,6 +98,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="run the repo-custom AST lint over src/repro/")
     ap.add_argument("--lint-json", metavar="PATH",
                     help="also write lint findings as JSON (CI artifact)")
+    ap.add_argument("--docs", action="store_true",
+                    help="link-check README/ROADMAP/docs/ markdown")
     ap.add_argument("--trace", action="append", default=[], metavar="PATH",
                     help="happens-before check a span log (repeatable)")
     ap.add_argument("--bench", action="append", default=[], metavar="PATH",
@@ -109,7 +113,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     args = ap.parse_args(argv)
 
     if not (args.all_configs or args.config or args.lint
-            or args.lint_json or args.trace or args.bench):
+            or args.lint_json or args.docs or args.trace or args.bench):
         args.all_configs = args.lint = True
 
     n_errors = 0
@@ -137,6 +141,14 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                             "message": x.message, "severity": x.severity}
                            for x in findings], f, indent=2)
             print(f"lint findings written to {args.lint_json}")
+
+    if args.docs:
+        from .docs import check_docs
+        findings = check_docs()
+        if args.strict:
+            findings = [Finding(f.code, f.where, f.message)
+                        for f in findings]
+        n_errors += _report("docs markdown links", findings)
 
     for path in args.bench:
         from .bench import TRACKED_DEFAULT, check_bench_result

@@ -1,6 +1,6 @@
 """Repo-custom AST lint (repro.check, component 6).
 
-Four rules that encode hard-won repo conventions generic linters cannot
+Five rules that encode hard-won repo conventions generic linters cannot
 know, run over every ``.py`` under ``src/repro/``:
 
 * ``raw-byte-math`` — wire-byte / link-time arithmetic
@@ -25,6 +25,10 @@ know, run over every ``.py`` under ``src/repro/``:
   kernel dispatch policy so the Pallas fast path (and its pricing
   telemetry) is reachable; a bare call silently pins the legacy global
   top-k and makes the planner's ``compress_seconds`` term a lie.
+* ``missing-module-docstring`` — a module under ``serving/`` with no
+  docstring.  The serving package is the newest subsystem and
+  ``docs/architecture.md`` links into it by module purpose; every file
+  there must say what it is for.
 
 Findings use code=rule and ``where="path:line"`` so CI can upload them
 as an artifact and tests can key on them.
@@ -40,18 +44,20 @@ from .errors import CheckError, Finding, raise_findings
 # modules allowed to do raw itemsize arithmetic (profile/encoding layer)
 _ITEMSIZE_OK = {
     "core/costmodel.py", "core/compression.py", "core/opgraph.py",
-    "elastic/replan.py",
+    "elastic/replan.py", "serving/costs.py",
 }
 # modules allowed to touch .beta / .bandwidth in arithmetic (α–β layer)
 _LINKMATH_OK = {
     "core/costmodel.py", "core/estimator.py", "core/network.py",
 }
-_WALLCLOCK_SCOPES = ("core/", "elastic/")
+_WALLCLOCK_SCOPES = ("core/", "elastic/", "serving/")
 _LINK_ATTRS = {"beta", "bandwidth"}
 # hot-path modules where compression calls must honour the kernel dispatch
 # policy (pass use_kernel= through) instead of silently pinning legacy XLA
 _DISPATCH_SCOPES = ("distributed/", "core/rad.py")
 _DISPATCH_FNS = {"topk_mask", "topk_select"}
+# packages where every module must open with a docstring
+_DOCSTRING_SCOPES = ("serving/",)
 
 
 class LintError(CheckError):
@@ -160,6 +166,11 @@ def lint_source(source: str, rel: str) -> List[Finding]:
                         f"cannot parse: {e.msg}")]
     v = _Visitor(rel)
     v.visit(tree)
+    if rel.startswith(_DOCSTRING_SCOPES) and ast.get_docstring(tree) is None:
+        v.findings.append(Finding(
+            "missing-module-docstring", f"{rel}:1",
+            "serving module without a docstring — state the module's "
+            "purpose so docs/architecture.md stays navigable"))
     return v.findings
 
 

@@ -1,89 +1,116 @@
-"""Serving launcher: batched prefill + greedy/temperature decode.
+"""Swarm serving launcher: stage-sharded decode over a simulated cluster.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b \
-        --size smoke --batch 4 --prompt-len 16 --gen 24
+        --requests 8 --rate 200 --n-stages 2 --churn
 
-Timing goes through :mod:`repro.obs.slog` structured events (respects
-``--log-level``/``--quiet``); sampled generations print at debug level.
+Thin CLI over :class:`repro.serving.ServingRuntime`: builds the model from
+a committed architecture config, stage-shards it across a simulated
+cluster, replays a Poisson request trace through the continuous-batching
+loop, and reports tokens/s + per-token latency percentiles.  ``--churn``
+scripts a mid-session stage-replica failure (derived from a dry run so it
+is guaranteed to interrupt a live session) and re-runs the same offered
+load through the re-route + KV-replay path.
+
+Artifacts: ``--trace``/``--flight`` write the span log and the routing
+decision log (render with ``python -m repro.obs.report TRACE --flight
+FLIGHT``).  Timing events go through :mod:`repro.obs.slog`.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.obs import MetricsRegistry
-from repro.obs import slog
+from repro.obs import (FlightRecorder, MetricsRegistry, TraceRecorder,
+                       slog, write_jsonl)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--size", choices=["smoke", "full"], default="smoke")
+    ap.add_argument("--devices", type=int, default=6,
+                    help="simulated cluster size")
+    ap.add_argument("--cluster", choices=["lan", "geo"], default="geo",
+                    help="homogeneous LAN or geo-distributed sites")
+    ap.add_argument("--n-stages", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate (req/s, simulated)")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(4, 12),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--gen", type=int, nargs=2, default=(16, 32),
+                    metavar=("LO", "HI"), help="per-request new tokens")
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="KV slots per stage replica")
+    ap.add_argument("--churn", action="store_true",
+                    help="also run a scripted mid-session failure leg")
+    ap.add_argument("--lease", type=float, default=1e-5,
+                    help="failure-detection lease (simulated s)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write span log JSONL (churn leg when --churn)")
+    ap.add_argument("--flight", metavar="PATH",
+                    help="write routing decision log JSONL")
+    slog.add_logging_args(ap)
+    return ap
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--size", choices=["smoke", "full"], default="smoke")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=24)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    slog.add_logging_args(ap)
-    args = ap.parse_args()
+    args = build_parser().parse_args()
     log = slog.get_logger("serve", metrics=MetricsRegistry(),
                           level=slog.level_from_args(args))
 
     from repro.configs import resolve
+    from repro.core.network import geo_random, homogeneous_lan
+    from repro.elastic.membership import ChurnTrace, MembershipView
     from repro.models import causal_lm
+    from repro.serving import (ServingCostModel, ServingRuntime,
+                               churn_trace_for, derive_midsession_failure,
+                               plan_serving, poisson_trace)
 
     cfg = resolve(args.arch).smoke if args.size == "smoke" \
         else resolve(args.arch).full
-    if cfg.family == "encdec":
-        raise SystemExit("use an enc-dec specific driver for seamless")
-    cache_len = args.prompt_len + args.gen + cfg.n_prefix
+    params = causal_lm.init(cfg, jax.random.PRNGKey(args.seed))
+    cluster = homogeneous_lan(args.devices) if args.cluster == "lan" \
+        else geo_random(args.devices, seed=args.seed)
+    costs = ServingCostModel(cfg, cluster)
+    plan = plan_serving(cfg, costs, list(range(args.devices)),
+                        n_stages=args.n_stages, cache_len=args.cache_len,
+                        max_batch=args.max_batch)
+    for line in plan.describe().splitlines():
+        log.debug("plan", line=line)
+    requests = poisson_trace(args.requests, rate=args.rate, vocab=cfg.vocab,
+                             prompt_len=tuple(args.prompt_len),
+                             gen_len=tuple(args.gen), seed=args.seed)
 
-    params = causal_lm.init(cfg, jax.random.PRNGKey(0))
-    rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0,
-                                 cfg.vocab)
-    prefix = None
-    if cfg.n_prefix:
-        prefix = jax.random.normal(rng, (args.batch, cfg.n_prefix,
-                                         cfg.d_frontend))
+    def leg(name: str, trace_events):
+        view = MembershipView(args.devices, trace_events,
+                              lease_s=args.lease)
+        tr = TraceRecorder()
+        fl = FlightRecorder()
+        runtime = ServingRuntime(cfg, params, plan, view, trace=tr,
+                                 flight=fl)
+        report = runtime.run(list(requests))
+        log.event(name, **report.to_dict())
+        return report, tr, fl
 
-    prefill = jax.jit(lambda p, t, pe: causal_lm.prefill(
-        cfg, p, t, cache_len=cache_len, prefix_embeds=pe))
-    decode = jax.jit(lambda p, c, t: causal_lm.decode_step(cfg, p, c, t),
-                     donate_argnums=(1,))
-
-    t0 = time.time()
-    logits, cache = prefill(params, prompts, prefix)
-    t_prefill = time.time() - t0
-
-    def sample(logits, key):
-        if args.temperature <= 0:
-            return jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)
-        return jax.random.categorical(key, logits[:, -1, :cfg.vocab]
-                                      / args.temperature)
-
-    tok = sample(logits, rng)
-    out = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        rng, k = jax.random.split(rng)
-        logits, cache = decode(params, cache, tok[:, None])
-        tok = sample(logits, k)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = (time.time() - t0) / max(args.gen - 1, 1)
-    gen = np.stack([np.asarray(t) for t in out], axis=1)
-    log.event("prefill", ms=t_prefill * 1e3, batch=args.batch,
-              prompt_len=args.prompt_len)
-    log.event("decode", ms_per_token=t_decode * 1e3,
-              tok_per_s=args.batch / max(t_decode, 1e-9))
-    for b in range(min(args.batch, 2)):
-        log.debug("sample", req=b,
-                  prompt=np.asarray(prompts[b])[:8].tolist(),
-                  generated=gen[b][:12].tolist())
+    report, tr, fl = leg("no_churn", ChurnTrace(()))
+    if args.churn:
+        victim, at, _, _ = derive_midsession_failure(
+            cfg, params, plan, requests, args.devices, lease_s=args.lease)
+        log.event("scripted_failure", victim=victim, at=at)
+        report, tr, fl = leg("churn", churn_trace_for(victim, at))
+        if not report.all_completed:
+            raise SystemExit("churn leg dropped sessions — "
+                             "re-route failed to recover")
+    if args.trace:
+        write_jsonl(tr.events(), args.trace)
+        log.event("artifact", kind="trace", path=args.trace)
+    if args.flight:
+        fl.to_jsonl(args.flight)
+        log.event("artifact", kind="flight", path=args.flight)
 
 
 if __name__ == "__main__":

@@ -24,21 +24,23 @@ from .export import (events_from_dicts, read_jsonl, to_trace_events,
                      validate_trace_events, write_chrome_trace, write_jsonl)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .record import (CalibrationRecord, CandidateScore, DetectorRecord,
-                     EpochFlightRecord, FlightRecorder, ReplanRecord)
+                     EpochFlightRecord, FlightRecorder, ReplanRecord,
+                     RouteRecord)
 from .slog import StructuredLogger, add_logging_args, get_logger
 from .trace import (CAT_BWD, CAT_CHECKPOINT, CAT_CONTROLLER, CAT_DECODE,
-                    CAT_ENCODE, CAT_FWD, CAT_MIGRATION, CAT_TRANSFER,
-                    CATEGORIES, CLOCK_SIM, CLOCK_WALL, TraceEvent,
-                    TraceRecorder)
+                    CAT_ENCODE, CAT_FWD, CAT_MIGRATION, CAT_SERVE_PREFILL,
+                    CAT_SERVE_REPLAY, CAT_TRANSFER, CATEGORIES, CLOCK_SIM,
+                    CLOCK_WALL, TraceEvent, TraceRecorder)
 
 __all__ = [
     "CAT_BWD", "CAT_CHECKPOINT", "CAT_CONTROLLER", "CAT_DECODE",
-    "CAT_ENCODE", "CAT_FWD", "CAT_MIGRATION", "CAT_TRANSFER", "CATEGORIES",
+    "CAT_ENCODE", "CAT_FWD", "CAT_MIGRATION", "CAT_SERVE_PREFILL",
+    "CAT_SERVE_REPLAY", "CAT_TRANSFER", "CATEGORIES",
     "CLOCK_SIM", "CLOCK_WALL", "CalibrationRecord", "CandidateScore",
     "Counter", "DetectorRecord", "EpochFlightRecord", "FlightRecorder",
     "Gauge", "Histogram", "MetricsRegistry", "MetricsTelemetrySink",
-    "ReplanRecord", "StructuredLogger", "TelemetryBus", "TraceEvent",
-    "TraceRecorder", "add_logging_args", "events_from_dicts", "get_logger",
-    "read_jsonl", "to_trace_events", "validate_trace_events",
+    "ReplanRecord", "RouteRecord", "StructuredLogger", "TelemetryBus",
+    "TraceEvent", "TraceRecorder", "add_logging_args", "events_from_dicts",
+    "get_logger", "read_jsonl", "to_trace_events", "validate_trace_events",
     "write_chrome_trace", "write_jsonl",
 ]

@@ -19,6 +19,10 @@ Record kinds::
                   + total score, the winner, plan-only hot swaps
     epoch         the installed epoch (mirrors EpochRecord, JSON-ready)
     detector      a straggler flag: node, severity, believed factor
+    route         a serving router decision: session admitted onto a chain
+                  of stage replicas, or re-routed mid-session around dead
+                  replicas (with the replayed-KV token count and what the
+                  alternative KV shipment would have cost on the wire)
 
 All records share ``kind``, ``step`` (data step) and ``clock`` (simulated
 seconds).  :meth:`FlightRecorder.to_jsonl` / :func:`read_jsonl` round-trip
@@ -103,6 +107,25 @@ class EpochFlightRecord:
     rollback_steps: int
     replan_mode: str = ""
     kind: str = "epoch"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteRecord:
+    """One serving-router decision (``cause``: admit | reroute)."""
+
+    step: int                         # decode round
+    clock: float                      # simulated seconds
+    session: str
+    cause: str                        # admit | reroute
+    dead: List[int]                   # replicas detected dead (reroute)
+    old_chain: List[int]              # device per stage before the decision
+    chain: List[int]                  # device per stage after
+    replay_tokens: int                # tokens replayed onto replacements
+    kv_ship_bytes: int                # what shipping the KV instead would cost
+    kind: str = "route"
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

@@ -207,6 +207,14 @@ def render_flight(records: Sequence[Mapping[str, Any]]) -> str:
             lines.append(f"{head} node={r.get('node')} "
                          f"severity={float(r.get('severity', 0.0)):.3g} "
                          f"believed={float(r.get('believed_factor', 0.0)):.3g}")
+        elif kind == "route":
+            arrow = "" if r.get("cause") != "reroute" \
+                else f" {r.get('old_chain')} ->"
+            lines.append(
+                f"{head} {r.get('cause')} s={r.get('session')}"
+                f"{arrow} chain={r.get('chain')} dead={r.get('dead')} "
+                f"replay={r.get('replay_tokens', 0)}tok "
+                f"(kv-ship alt {int(r.get('kv_ship_bytes', 0)) / 1e6:.3g}MB)")
         else:
             lines.append(f"{head} {dict(r)}")
     return "\n".join(lines)

@@ -25,6 +25,9 @@ Categories (the ``cat`` field — what the report CLI groups by)::
     migrate.stream          bulk state migration transfers (fore+background)
     checkpoint.restore      state restored out of the broker's store
     controller              epochs, churn events, detector trips, re-plans
+    serve.prefill           serving: prompt forward through one stage replica
+    serve.replay            serving: KV-prefix replay onto a replacement
+                            replica after a mid-session re-route
 
 Guarantees the rest of the repo relies on:
 
@@ -56,9 +59,12 @@ CAT_DECODE = "compress.decode"
 CAT_MIGRATION = "migrate.stream"
 CAT_CHECKPOINT = "checkpoint.restore"
 CAT_CONTROLLER = "controller"
+CAT_SERVE_PREFILL = "serve.prefill"
+CAT_SERVE_REPLAY = "serve.replay"
 
 CATEGORIES = (CAT_FWD, CAT_BWD, CAT_TRANSFER, CAT_ENCODE, CAT_DECODE,
-              CAT_MIGRATION, CAT_CHECKPOINT, CAT_CONTROLLER)
+              CAT_MIGRATION, CAT_CHECKPOINT, CAT_CONTROLLER,
+              CAT_SERVE_PREFILL, CAT_SERVE_REPLAY)
 
 CLOCK_SIM = "sim"
 CLOCK_WALL = "wall"

@@ -1,0 +1,225 @@
+"""Stage-sharded decoder: the model side of the serving swarm.
+
+Training pipelines this repo already shards at the *op* granularity
+(OP-Fence over the metadata OP-DAG).  Serving wants something coarser and
+replica-friendly: the Petals deployment unit is a contiguous *run of
+transformer blocks* a volunteer can host, with embeddings on the first hop
+and the LM head on the last (SNIPPETS.md 1–2: ``RemoteSequential`` holds
+the block run, the client owns sampling).  This module slices the unified
+:mod:`repro.models.causal_lm` decoder the same way:
+
+* :class:`StageSpec` — one contiguous ``[lo, hi)`` layer slice of the
+  scanned block stack, plus whether this stage embeds tokens (first) and
+  applies the final norm + head (last);
+* :func:`split_stages` — near-equal contiguous split of ``cfg.n_layers``;
+* :func:`stage_params` — the parameter subtree one stage replica hosts
+  (block slice + embed table on the first stage, head on the last; a tied
+  head means the last stage also carries the embed table);
+* :func:`stage_prefill` / :func:`stage_decode` — the per-stage forward
+  paths.  They reuse the *same* block bodies and scan machinery as the
+  monolithic ``prefill`` / ``decode_step``, so a chain of stages is
+  **bit-identical** to the single-process model (pinned in
+  ``tests/test_serving.py``) — which is what makes mid-session re-routing
+  testable: replaying a session's inputs through a replacement replica must
+  reproduce its KV cache exactly.
+
+Families supported: ``dense`` and ``moe`` — the KV-cache families whose
+block stack is a single scanned segment.  Recurrent-state families
+(hybrid/xLSTM) and prefix-fed VLMs keep the monolithic path for now.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelCfg
+from repro.models import attention as attn
+from repro.models.causal_lm import (_dense_block_decode, _dense_block_prefill,
+                                    _head, _moe_block_decode,
+                                    _moe_block_prefill, segments)
+from repro.models.layers import embed, norm_apply
+from repro.models.scan_config import scan as _scan
+
+STAGE_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """One contiguous slice ``[lo, hi)`` of the scanned block stack."""
+
+    index: int
+    n_stages: int
+    lo: int
+    hi: int
+
+    @property
+    def first(self) -> bool:
+        return self.index == 0
+
+    @property
+    def last(self) -> bool:
+        return self.index == self.n_stages - 1
+
+    @property
+    def n_layers(self) -> int:
+        return self.hi - self.lo
+
+    def __str__(self) -> str:
+        return f"stage{self.index}[{self.lo}:{self.hi}]"
+
+
+def check_shardable(cfg: ModelCfg) -> None:
+    """Raise unless ``cfg`` is a single-segment KV-cache decoder."""
+    if cfg.family not in STAGE_FAMILIES:
+        raise ValueError(
+            f"{cfg.name}: stage-sharded serving supports {STAGE_FAMILIES}, "
+            f"not family {cfg.family!r} (recurrent-state caches cannot be "
+            "sliced per layer range yet)")
+    if cfg.n_prefix > 0:
+        raise ValueError(f"{cfg.name}: prefix-fed models (n_prefix="
+                         f"{cfg.n_prefix}) keep the monolithic path")
+    segs = segments(cfg)
+    if len(segs) != 1 or segs[0].name != "blocks":
+        raise ValueError(f"{cfg.name}: expected one scanned 'blocks' "
+                         f"segment, got {[s.name for s in segs]}")
+
+
+def split_stages(cfg: ModelCfg, n_stages: int) -> List[StageSpec]:
+    """Near-equal contiguous layer split (earlier stages take the
+    remainder, matching the pipeline convention)."""
+    check_shardable(cfg)
+    if not (1 <= n_stages <= cfg.n_layers):
+        raise ValueError(f"n_stages must be in [1, {cfg.n_layers}], "
+                         f"got {n_stages}")
+    base, rem = divmod(cfg.n_layers, n_stages)
+    out: List[StageSpec] = []
+    lo = 0
+    for i in range(n_stages):
+        hi = lo + base + (1 if i < rem else 0)
+        out.append(StageSpec(index=i, n_stages=n_stages, lo=lo, hi=hi))
+        lo = hi
+    return out
+
+
+def _slice_blocks(tree, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], tree)
+
+
+def stage_params(cfg: ModelCfg, params: Dict[str, Any],
+                 spec: StageSpec) -> Dict[str, Any]:
+    """The parameter subtree one replica of ``spec`` hosts."""
+    sp: Dict[str, Any] = {"blocks": _slice_blocks(params["blocks"],
+                                                  spec.lo, spec.hi)}
+    if spec.first or (spec.last and cfg.tie_embeddings):
+        sp["embed"] = params["embed"]
+    if spec.first and cfg.rope_fraction == 0.0:
+        sp["pos_embed"] = params["pos_embed"]
+    if spec.last:
+        sp["final_norm"] = params["final_norm"]
+        if not cfg.tie_embeddings:
+            sp["head"] = params["head"]
+    return sp
+
+
+def _embed_first(cfg: ModelCfg, sp, tokens: jax.Array, pos0) -> jax.Array:
+    x = embed(sp["embed"], tokens, cfg.dtype)
+    if cfg.rope_fraction == 0.0:
+        S = tokens.shape[1]
+        pos = pos0 + jnp.arange(S)
+        x = x + embed(sp["pos_embed"], pos, cfg.dtype)[None]
+    return x
+
+
+def stage_prefill(cfg: ModelCfg, spec: StageSpec, sp: Dict[str, Any],
+                  inp: jax.Array, cache_len: int,
+                  window: Optional[int] = None
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prompt forward through one stage.
+
+    ``inp`` is ``(B, S)`` int tokens on the first stage, ``(B, S, d)``
+    hidden states otherwise.  Returns ``(out, kv)`` where ``out`` is the
+    boundary hidden states ``(B, S, d)`` (last-position logits ``(B, 1, V)``
+    on the last stage) and ``kv`` the stage's stacked
+    ``{"k", "v"}: (n_layers, B, cache_len, H_kv, hd)`` cache.
+    """
+    window = window if window is not None else cfg.window
+    x = _embed_first(cfg, sp, inp, 0) if spec.first else inp
+
+    def body(h, pl):
+        if cfg.family == "dense":
+            h2, kvc = _dense_block_prefill(cfg, pl, h, window, cache_len)
+        else:
+            h2, _, kvc = _moe_block_prefill(cfg, pl, h, window, cache_len)
+        return h2, {"k": kvc.k, "v": kvc.v}
+
+    x, kv = _scan(body, x, sp["blocks"])
+    if spec.last:
+        h = norm_apply(cfg.norm, sp["final_norm"], x[:, -1:, :])
+        return _head(cfg, sp, h), kv
+    return x, kv
+
+
+def stage_decode(cfg: ModelCfg, spec: StageSpec, sp: Dict[str, Any],
+                 inp: jax.Array, kv: Dict[str, jax.Array], pos: jax.Array,
+                 window: Optional[int] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode through one stage.
+
+    ``inp`` is ``(B, 1)`` int tokens on the first stage, ``(B, 1, d)``
+    hidden states otherwise; ``pos`` the scalar index of this token.
+    Returns ``(out, kv)`` with ``out`` the boundary hidden ``(B, 1, d)``
+    (logits ``(B, 1, V)`` on the last stage).
+    """
+    window = window if window is not None else cfg.window
+    if spec.first:
+        x = embed(sp["embed"], inp, cfg.dtype)
+        if cfg.rope_fraction == 0.0:
+            x = x + embed(sp["pos_embed"], pos[None], cfg.dtype)[None]
+    else:
+        x = inp
+
+    def body(h, xs):
+        pl, c = xs
+        kvc = attn.KVCache(c["k"], c["v"])
+        if cfg.family == "dense":
+            h2, kvc = _dense_block_decode(cfg, pl, h, kvc, pos, window)
+        else:
+            h2, kvc = _moe_block_decode(cfg, pl, h, kvc, pos, window)
+        return h2, {"k": kvc.k, "v": kvc.v}
+
+    x, new_kv = _scan(body, x, (sp["blocks"], kv))
+    if spec.last:
+        h = norm_apply(cfg.norm, sp["final_norm"], x)
+        return _head(cfg, sp, h), new_kv
+    return x, new_kv
+
+
+class StageExecutor:
+    """Jitted prefill/decode for one :class:`StageSpec`.
+
+    One executor is shared by every replica of a stage (replicas host
+    byte-identical parameters), so each distinct ``(stage, input shape)``
+    compiles once per process regardless of swarm size.
+    """
+
+    def __init__(self, cfg: ModelCfg, spec: StageSpec,
+                 sp: Dict[str, Any], cache_len: int):
+        self.cfg = cfg
+        self.spec = spec
+        self.params = sp
+        self.cache_len = int(cache_len)
+        self._prefill = jax.jit(
+            lambda p, inp: stage_prefill(cfg, spec, p, inp, self.cache_len))
+        self._decode = jax.jit(
+            lambda p, inp, kv, pos: stage_decode(cfg, spec, p, inp, kv, pos))
+
+    def prefill(self, inp: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return self._prefill(self.params, inp)
+
+    def decode(self, inp: jax.Array, kv: Dict[str, jax.Array],
+               pos: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        return self._decode(self.params, inp, kv, jnp.asarray(pos, jnp.int32))
