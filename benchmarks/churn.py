@@ -52,10 +52,13 @@ path so CI exercises the new overlap defaults end to end.
 (:mod:`repro.obs`) to two representative runs — the 1-failure ``elastic``
 system and the closed-loop ``calibrated`` controller — and writes
 ``TRACE_<name>.json`` (Perfetto), ``TRACE_<name>.jsonl`` (loss-free event
-log) and ``FLIGHT_<name>.jsonl`` (the broker's decision log) next to the
-BENCH artifacts, then prints the run report (timeline, comm/compute overlap,
-straggler heatmap, decision log).  Tracing is observation-only: the traced
-runs' simulated metrics are bit-identical to untraced ones (tested).
+log), ``FLIGHT_<name>.jsonl`` (the broker's decision log, including any
+watchdog trips), ``METRICS_<name>.json`` (metrics snapshot with the sim's
+busy totals) and ``CRITPATH_<name>.json`` (the critical-path blame table)
+next to the BENCH artifacts, then prints the run report (timeline,
+comm/compute overlap, straggler heatmap, critical path, top interventions,
+decision log).  Tracing is observation-only: the traced runs' simulated
+metrics are bit-identical to untraced ones (tested).
 """
 from __future__ import annotations
 
@@ -106,16 +109,25 @@ def _workload(profile: str):
 
 
 def _obs_kit():
-    """A fresh (tracer, flight recorder, metrics) bundle for one traced run."""
-    from repro.obs import FlightRecorder, MetricsRegistry, TraceRecorder
+    """A fresh (tracer, flight, metrics, watchdog) bundle for one traced
+    run.  The watchdog subscribes to the controller's telemetry bus and
+    writes its trips into the same flight recorder, so the decision log
+    shows symptom (watchdog) and cure (re-plan) on one timeline."""
+    from repro.obs import FlightRecorder, MetricsRegistry, TraceRecorder, Watchdog
     return dict(tracer=TraceRecorder(), flight=FlightRecorder(),
-                metrics=MetricsRegistry())
+                metrics=MetricsRegistry(), watchdog=Watchdog())
 
 
 def _write_obs(name: str, kit) -> None:
-    """Emit the trace/flight artifacts for one instrumented run and print
-    its report.  The Perfetto export is schema-checked before it is written
-    — a malformed trace fails the bench, not the viewer."""
+    """Emit the trace/flight/metrics/attribution artifacts for one
+    instrumented run and print its report.  The Perfetto export is
+    schema-checked before it is written — a malformed trace fails the
+    bench, not the viewer.  The metrics snapshot carries the simulator's
+    ``sim_*_busy_seconds`` totals, which CI gates the critpath attribution
+    against (``--expect-busy``, 1% budget)."""
+    import json
+
+    from repro.obs import critpath as obs_critpath
     from repro.obs import export as obs_export
     from repro.obs import report as obs_report
     bad = obs_export.validate_trace_events(
@@ -123,12 +135,27 @@ def _write_obs(name: str, kit) -> None:
     assert not bad, bad
     chrome, jsonl = f"TRACE_{name}.json", f"TRACE_{name}.jsonl"
     flight = f"FLIGHT_{name}.jsonl"
-    obs_export.write_chrome_trace(kit["tracer"], chrome)
-    obs_export.write_jsonl(kit["tracer"], jsonl)
+    metrics_path = f"METRICS_{name}.json"
+    crit_path = f"CRITPATH_{name}.json"
+    obs_export.write_chrome_trace(kit["tracer"], chrome,
+                                  metrics=kit["metrics"])
+    obs_export.write_jsonl(kit["tracer"], jsonl, metrics=kit["metrics"])
     kit["flight"].to_jsonl(flight)
-    print(f"# wrote {chrome} {jsonl} {flight}", flush=True)
-    print(obs_report.build_report(kit["tracer"].events(),
-                                  kit["flight"].to_dicts()), flush=True)
+    with open(metrics_path, "w") as f:
+        json.dump(kit["metrics"].snapshot(), f, indent=2, sort_keys=True)
+        f.write("\n")
+    events = kit["tracer"].events()
+    decomps = obs_critpath.analyze(events)
+    rows = obs_critpath.blame(decomps)
+    busy = obs_critpath.busy_accounting(events)
+    with open(crit_path, "w") as f:
+        json.dump(obs_critpath.to_artifact(decomps, rows, busy, source=jsonl),
+                  f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {chrome} {jsonl} {flight} {metrics_path} {crit_path}",
+          flush=True)
+    print(obs_report.build_report(events, kit["flight"].to_dicts()),
+          flush=True)
 
 
 def run(csv_writer, horizon: int = HORIZON, profile: str = "gpt2-xl",

@@ -33,16 +33,29 @@ one reviewable baseline diff::
         --json
     PYTHONPATH=src python -m benchmarks.compare BENCH_joint_planning.json \
         benchmarks/baselines/BENCH_baseline_joint.json --write-baseline
+
+``--history`` appends the new artifact's tracked metrics to
+``benchmarks/baselines/HISTORY_<name>.jsonl`` (one JSON line per CI run)
+and fails on a *monotone 3-run degradation* of any tracked metric — three
+consecutive runs each strictly worse than the one before.  That catches
+the slow-boil regression the single-baseline gate's 10% margin lets
+through one slice at a time, and starts accumulating the bench trajectory
+the baselines directory was always meant to hold.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
-from typing import Dict, List, Mapping
+from typing import Dict, List, Mapping, Sequence
 
 # metric -> direction: +1 higher-is-better, -1 lower-is-better
 TRACKED = {"pace": -1, "phi": +1}
+
+# consecutive strictly-worsening runs (including the new one) that fail
+# the --history gate
+HISTORY_RUNS = 3
 
 
 def load_result(path: str, validate: bool = True) -> Dict:
@@ -128,22 +141,112 @@ def write_baseline(new: Mapping, path: str, source: str = "") -> None:
         f.write("\n")
 
 
+def tracked_only(result: Mapping) -> Dict[str, Dict[str, float]]:
+    """The gate-relevant slice of a result: per-system tracked metrics."""
+    out: Dict[str, Dict[str, float]] = {}
+    for system, metrics in sorted(result.items()):
+        if not isinstance(metrics, Mapping):
+            continue
+        row = {m: float(metrics[m]) for m in TRACKED if m in metrics}
+        if row:
+            out[system] = row
+    return out
+
+
+def history_gate(entries: Sequence[Mapping],
+                 runs: int = HISTORY_RUNS) -> List[str]:
+    """Violation messages when the last ``runs`` history entries show a
+    *monotone* degradation of a tracked metric — each run strictly worse
+    than the one before.  Pure (list of history entries in, strings out)
+    so the trend rule is unit-testable."""
+    if len(entries) < runs:
+        return []
+    tail = [e.get("result", {}) for e in entries[-runs:]]
+    violations: List[str] = []
+    last = tail[-1]
+    for system, metrics in sorted(last.items()):
+        if not isinstance(metrics, Mapping):
+            continue
+        for metric, sign in TRACKED.items():
+            try:
+                series = [float(t[system][metric]) for t in tail]
+            except (KeyError, TypeError):
+                continue
+            worsening = all(
+                (b > a) if sign < 0 else (b < a)
+                for a, b in zip(series, series[1:]))
+            if worsening:
+                arrow = " -> ".join(f"{v:.6g}" for v in series)
+                direction = "rising" if sign < 0 else "falling"
+                violations.append(
+                    f"{system}.{metric}: monotone {direction} over the last "
+                    f"{runs} runs ({arrow}, "
+                    f"{'lower' if sign < 0 else 'higher'} is better)")
+    return violations
+
+
+def append_history(result: Mapping, history_path: str,
+                   source: str = "") -> List[Mapping]:
+    """Append the tracked slice of ``result`` to the history JSONL and
+    return all entries (oldest first, the new one last)."""
+    entries: List[Mapping] = []
+    if os.path.exists(history_path):
+        with open(history_path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    entries.append(json.loads(line))
+    entry = {"source": source, "result": tracked_only(result)}
+    entries.append(entry)
+    os.makedirs(os.path.dirname(history_path) or ".", exist_ok=True)
+    with open(history_path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entries
+
+
+def history_path_for(new_path: str, history_dir: str) -> str:
+    """``BENCH_<name>.json`` -> ``<history_dir>/HISTORY_<name>.jsonl``."""
+    stem = os.path.splitext(os.path.basename(new_path))[0]
+    if stem.startswith("BENCH_"):
+        stem = stem[len("BENCH_"):]
+    return os.path.join(history_dir, f"HISTORY_{stem}.jsonl")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("new", help="freshly produced BENCH_<name>.json")
-    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="committed baseline json (optional with --history)")
     ap.add_argument("--max-regress", type=float, default=0.10,
                     help="relative regression budget per metric (0.10 = 10%%)")
     ap.add_argument("--write-baseline", action="store_true",
                     help="refresh BASELINE from NEW instead of gating")
+    ap.add_argument("--history", action="store_true",
+                    help="append NEW's tracked metrics to "
+                         "HISTORY_<name>.jsonl and fail on a monotone "
+                         f"{HISTORY_RUNS}-run degradation")
+    ap.add_argument("--history-dir", default="benchmarks/baselines",
+                    help="directory holding HISTORY_<name>.jsonl files")
     args = ap.parse_args(argv)
     if args.write_baseline:
+        if args.baseline is None:
+            ap.error("--write-baseline needs a BASELINE path")
         write_baseline(load_result(args.new), args.baseline, source=args.new)
         print(f"baseline refreshed: {args.baseline} <- {args.new}")
         return 0
-    new, base = load_result(args.new), load_result(args.baseline)
-    print(format_table(new, base))
-    violations = compare(new, base, args.max_regress)
+    if args.baseline is None and not args.history:
+        ap.error("need a BASELINE to gate against (or --history)")
+    new = load_result(args.new)
+    violations: List[str] = []
+    if args.baseline is not None:
+        base = load_result(args.baseline)
+        print(format_table(new, base))
+        violations += compare(new, base, args.max_regress)
+    if args.history:
+        hist_path = history_path_for(args.new, args.history_dir)
+        entries = append_history(new, hist_path, source=args.new)
+        print(f"history: {hist_path} now {len(entries)} run(s)")
+        violations += history_gate(entries)
     if violations:
         print("\nPERF GATE FAILED "
               f"(budget {args.max_regress * 100:.0f}%):", file=sys.stderr)

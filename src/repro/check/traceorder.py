@@ -5,8 +5,8 @@ spans are causally impossible.  This module replays a recorded span log
 and verifies the ordering the sim executor promises:
 
 * **monotonic tracks** — on every serial sim-clock resource track
-  (``dev<i>`` compute, ``link a->b`` transfer) span starts are
-  non-decreasing in record (``seq``) order,
+  (``dev<i>`` compute, ``link a->b`` transfer, ``codec<i>`` encode)
+  span starts are non-decreasing in record (``seq``) order,
 * **serial links/devices** — within one training step no two spans on
   one such track overlap: a link never carries two sends at once, a
   device never computes two micro-batches at once,
@@ -41,16 +41,26 @@ from repro.obs.trace import (CAT_BWD, CAT_FWD, CAT_TRANSFER, CLOCK_SIM,
 
 from .errors import Finding, SEV_WARN, TraceOrderError, raise_findings
 
-_XFER_RE = re.compile(r"^([FB])xfer\.mb(\d+)$")
-_LINK_RE = re.compile(r"^link (\d+)->(\d+)$")
-_COMP_RE = re.compile(r"^([FB])(\d+)\.mb(\d+)$")
-_DEV_RE = re.compile(r"^dev(\d+)$")
+# The sim span vocabulary, public: these regexes are the single source of
+# truth for parsing executor traces — the critical-path analyzer
+# (repro.obs.critpath) builds its happens-before DAG from the same rules,
+# so the two layers cannot drift apart.
+XFER_RE = re.compile(r"^([FB])xfer\.mb(\d+)$")
+LINK_RE = re.compile(r"^link (\d+)->(\d+)$")
+COMP_RE = re.compile(r"^([FB])(\d+)\.mb(\d+)$")
+DEV_RE = re.compile(r"^dev(\d+)$")
+ENC_RE = re.compile(r"^([FB])enc\.mb(\d+)$")
+CODEC_RE = re.compile(r"^codec(\d+)$")
+
+# backwards-compatible private aliases (pre-PR-10 names)
+_XFER_RE, _LINK_RE, _COMP_RE, _DEV_RE = XFER_RE, LINK_RE, COMP_RE, DEV_RE
 
 
 def _is_serial_track(e: TraceEvent) -> bool:
     return e.clock == CLOCK_SIM and (
-        _DEV_RE.match(e.track) is not None
-        or _LINK_RE.match(e.track) is not None)
+        DEV_RE.match(e.track) is not None
+        or LINK_RE.match(e.track) is not None
+        or CODEC_RE.match(e.track) is not None)
 
 
 def _attempt_of(e: TraceEvent) -> Any:
@@ -107,9 +117,12 @@ def check_trace_order(events: Sequence[TraceEvent],
             sevs = sorted(sevs, key=lambda e: (e.ts, e.seq))
             for a, b in zip(sevs, sevs[1:]):
                 if b.ts < a.ts + a.dur - tol:
-                    what = "two sends in flight" \
-                        if track.startswith("link") \
-                        else "two compute windows"
+                    if track.startswith("link"):
+                        what = "two sends in flight"
+                    elif track.startswith("codec"):
+                        what = "two encodes in flight"
+                    else:
+                        what = "two compute windows"
                     out.append(Finding(
                         "overlap", track,
                         f"track {track!r}"

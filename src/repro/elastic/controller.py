@@ -237,6 +237,7 @@ class ElasticController:
                  tracer: Optional[TraceRecorder] = None,
                  flight: Optional[FlightRecorder] = None,
                  metrics: Optional[MetricsRegistry] = None,
+                 watchdog: Optional[Any] = None,
                  verify: bool = True):
         if migration_mode not in ("stop", "overlap"):
             raise ValueError(f"unknown migration_mode {migration_mode!r}")
@@ -305,6 +306,17 @@ class ElasticController:
         self.telemetry_bus = TelemetryBus([self.telemetry])
         if metrics is not None:
             self.telemetry_bus.subscribe(MetricsTelemetrySink(metrics))
+        # The watchdog is the *knowing* half of the control loop: it flags a
+        # regime shift on the first degraded sample (flight record + slog
+        # warning), steps before this controller's own windowed detector has
+        # enough evidence to *act* — asserted in the churn acceptance test.
+        self.watchdog = watchdog
+        if watchdog is not None:
+            if watchdog.flight is None:
+                watchdog.flight = flight
+            if watchdog.metrics is None:
+                watchdog.metrics = metrics
+            self.telemetry_bus.subscribe(watchdog)
 
         self.membership = MembershipView(len(cluster), trace, lease_s=lease_s,
                                          initial_alive=initial_alive)
@@ -553,6 +565,8 @@ class ElasticController:
                 loss_val = float(loss)
             sim_time = self._step_timing(step)
             self.clock += sim_time
+            if self.watchdog is not None:
+                self.watchdog.observe_step(step, self.clock, sim_time)
             step += 1
             self.step_records.append(StepRecord(
                 step=step, epoch=self.epoch, loss=loss_val,
@@ -837,11 +851,23 @@ class ElasticController:
                                      true_cl, self.plan,
                                      n_micro=self.n_micro, telemetry=sink,
                                      trace=span_rec, cost_model=true_model)
+            busy_totals = (float(sum(sim.device_busy)),
+                           float(sim.link_busy),
+                           float(sim.compress_busy))
             self._obs_cache = (key, sim.iteration_time, sink.samples,
                                sink.link_samples, sink.kernel_samples,
-                               tuple(span_rec.events()) if span_rec else ())
-        _, sim_time, samples, link_samples, kernel_samples, spans = \
-            self._obs_cache
+                               tuple(span_rec.events()) if span_rec else (),
+                               busy_totals)
+        (_, sim_time, samples, link_samples, kernel_samples, spans,
+         busy_totals) = self._obs_cache
+        if self.metrics is not None:
+            # the simulator's own busy accounting, accumulated per step:
+            # the critpath CLI's --expect-busy gate checks the trace-derived
+            # attribution against these totals (CI fails on >1% drift)
+            dev_busy, link_busy, codec_busy = busy_totals
+            self.metrics.counter("sim_device_busy_seconds").inc(dev_busy)
+            self.metrics.counter("sim_link_busy_seconds").inc(link_busy)
+            self.metrics.counter("sim_compress_busy_seconds").inc(codec_busy)
         if tracing and spans:
             # (step, epoch) identifies one execution attempt: after a
             # rollback the same data step re-executes under the next epoch,

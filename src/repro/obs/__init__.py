@@ -13,20 +13,28 @@ One spine, four artifacts:
   straggler heatmap, and decision log from the artifacts;
 * :mod:`repro.obs.bus`     — telemetry fan-out so the broker's TelemetryLog,
   the metrics registry, and user sinks all subscribe to one stream;
-* :mod:`repro.obs.slog`    — structured ``event k=v`` logging for launchers.
+* :mod:`repro.obs.slog`    — structured ``event k=v`` logging for launchers;
+* :mod:`repro.obs.watchdog` — streaming SLO rules + EWMA/MAD anomaly
+  detectors emitting typed :class:`WatchdogRecord` trips;
+* :mod:`repro.obs.critpath` / :mod:`repro.obs.whatif` — critical-path
+  bottleneck attribution over span logs and counterfactual re-pricing
+  (imported explicitly, not re-exported: they pull in :mod:`repro.check`
+  and :mod:`repro.core` lazily).
 
 Everything here is dependency-free (stdlib + the repo's own dataclasses) and
 no-ops when disabled, so instrumented hot paths cost nothing in production
 runs that don't ask for a trace.
 """
 from .bus import MetricsTelemetrySink, TelemetryBus
-from .export import (events_from_dicts, read_jsonl, to_trace_events,
-                     validate_trace_events, write_chrome_trace, write_jsonl)
+from .export import (events_from_dicts, read_header, read_jsonl,
+                     surface_drops, to_trace_events, validate_trace_events,
+                     write_chrome_trace, write_jsonl)
 from .metrics import Counter, Gauge, Histogram, MetricsRegistry
 from .record import (CalibrationRecord, CandidateScore, DetectorRecord,
                      EpochFlightRecord, FlightRecorder, ReplanRecord,
-                     RouteRecord)
+                     RouteRecord, WatchdogRecord)
 from .slog import StructuredLogger, add_logging_args, get_logger
+from .watchdog import Watchdog
 from .trace import (CAT_BWD, CAT_CHECKPOINT, CAT_CONTROLLER, CAT_DECODE,
                     CAT_ENCODE, CAT_FWD, CAT_MIGRATION, CAT_SERVE_PREFILL,
                     CAT_SERVE_REPLAY, CAT_TRANSFER, CATEGORIES, CLOCK_SIM,
@@ -40,7 +48,8 @@ __all__ = [
     "Counter", "DetectorRecord", "EpochFlightRecord", "FlightRecorder",
     "Gauge", "Histogram", "MetricsRegistry", "MetricsTelemetrySink",
     "ReplanRecord", "RouteRecord", "StructuredLogger", "TelemetryBus",
-    "TraceEvent", "TraceRecorder", "add_logging_args", "events_from_dicts",
-    "get_logger", "read_jsonl", "to_trace_events", "validate_trace_events",
+    "TraceEvent", "TraceRecorder", "Watchdog", "WatchdogRecord",
+    "add_logging_args", "events_from_dicts", "get_logger", "read_header",
+    "read_jsonl", "surface_drops", "to_trace_events", "validate_trace_events",
     "write_chrome_trace", "write_jsonl",
 ]

@@ -74,8 +74,10 @@ def to_trace_events(recorder_or_events) -> List[Dict[str, Any]]:
     return out
 
 
-def write_chrome_trace(recorder_or_events, path: str) -> int:
+def write_chrome_trace(recorder_or_events, path: str, metrics=None) -> int:
     """Write the Perfetto-loadable JSON; returns the event count."""
+    if isinstance(recorder_or_events, TraceRecorder):
+        surface_drops(recorder_or_events, metrics)
     events = to_trace_events(recorder_or_events)
     with open(path, "w") as f:
         json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
@@ -83,12 +85,46 @@ def write_chrome_trace(recorder_or_events, path: str) -> int:
 
 
 # ------------------------------------------------------------------ JSONL --
-def write_jsonl(recorder_or_events, path: str) -> int:
-    """Raw recorder events, one JSON object per line (loss-free)."""
-    events = recorder_or_events.events() \
-        if isinstance(recorder_or_events, TraceRecorder) \
+JSONL_SCHEMA = "repro.obs/trace.v1"
+
+
+def surface_drops(recorder: TraceRecorder, metrics=None) -> int:
+    """Make ring-buffer overflow loud: when the recorder dropped events,
+    emit a ``slog`` warning and bump the ``trace_dropped_events`` counter
+    (a truncated trace silently breaks every attribution built on it).
+    Returns the drop count."""
+    dropped = int(recorder.n_dropped)
+    if dropped > 0:
+        from .slog import get_logger
+        get_logger("repro.obs").warn(
+            "trace_ring_overflow", dropped=dropped,
+            capacity=int(recorder.capacity), kept=len(recorder.events()))
+        if metrics is not None:
+            c = metrics.counter("trace_dropped_events")
+            c.inc(max(0, dropped - int(c.value)))
+    return dropped
+
+
+def write_jsonl(recorder_or_events, path: str, metrics=None) -> int:
+    """Raw recorder events, one JSON object per line (loss-free), preceded
+    by one header line stamping the recorder's drop accounting::
+
+        {"header": "repro.obs/trace.v1", "n_events": ..., "n_dropped": ...,
+         "capacity": ...}
+
+    so downstream consumers (:mod:`repro.obs.critpath`, the report CLI) can
+    refuse silently-truncated inputs.  Returns the *event* count (the
+    header line is metadata, not an event)."""
+    is_rec = isinstance(recorder_or_events, TraceRecorder)
+    events = recorder_or_events.events() if is_rec \
         else list(recorder_or_events)
+    dropped = surface_drops(recorder_or_events, metrics) if is_rec else 0
+    header = {"header": JSONL_SCHEMA, "n_events": len(events),
+              "n_dropped": dropped,
+              "capacity": (int(recorder_or_events.capacity)
+                           if is_rec else None)}
     with open(path, "w") as f:
+        f.write(json.dumps(header, sort_keys=True) + "\n")
         for e in events:
             f.write(json.dumps({
                 "seq": e.seq, "clock": e.clock, "ph": e.phase, "cat": e.cat,
@@ -108,13 +144,25 @@ def read_jsonl(path: str) -> List[Dict[str, Any]]:
     return out
 
 
+def read_header(dicts: Iterable[Mapping[str, Any]]
+                ) -> Optional[Mapping[str, Any]]:
+    """The JSONL header from :func:`read_jsonl` output, or ``None`` for
+    pre-header files (which by construction never reported drops)."""
+    for d in dicts:
+        if "header" in d and "seq" not in d:
+            return d
+        break
+    return None
+
+
 def events_from_dicts(dicts: Iterable[Mapping[str, Any]]) -> List[TraceEvent]:
-    """Rebuild TraceEvents from :func:`read_jsonl` output (round-trip)."""
+    """Rebuild TraceEvents from :func:`read_jsonl` output (round-trip).
+    Header/metadata lines (no ``seq``) are skipped."""
     return [TraceEvent(seq=int(d["seq"]), clock=d["clock"], phase=d["ph"],
                        cat=d["cat"], name=d["name"], track=d["track"],
                        ts=float(d["ts"]), dur=float(d.get("dur") or 0.0),
                        args=d.get("args"))
-            for d in dicts]
+            for d in dicts if "seq" in d]
 
 
 # ------------------------------------------------------------- validation --

@@ -99,6 +99,30 @@ class Histogram:
     def mean(self) -> float:
         return self.total / self.count if self.count else 0.0
 
+    def percentile(self, q: float) -> float:
+        """Approximate ``q``-th percentile (``0 < q <= 100``) from the
+        log-scale buckets.
+
+        Error bound: a bucket ``b`` holds samples in ``(base**b,
+        base**(b+1)]``; this returns the bucket's upper edge (clamped into
+        ``[self.min, self.max]``), so the result is **within one factor of
+        ``base`` above** the true sample percentile — e.g. at most 2× with
+        the default ``base=2.0``, and within ~1% with ``base=1.01``.
+        Non-positive samples share one underflow bucket reported as
+        ``min(0.0, self.max)`` clamped the same way."""
+        if not 0.0 < q <= 100.0:
+            raise ValueError(f"percentile q={q!r} not in (0, 100]")
+        if self.count == 0:
+            raise ValueError("percentile of an empty histogram")
+        rank = max(1, math.ceil(q / 100.0 * self.count))
+        seen = 0
+        for b in sorted(self.buckets):
+            seen += self.buckets[b]
+            if seen >= rank:
+                edge = 0.0 if b <= -10 ** 6 else self.base ** (b + 1)
+                return min(max(edge, self.min), self.max)
+        return self.max
+
 
 class MetricsRegistry:
     """Thread-safe, lazily-populated metric store."""

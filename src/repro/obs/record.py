@@ -23,6 +23,9 @@ Record kinds::
                   of stage replicas, or re-routed mid-session around dead
                   replicas (with the replayed-KV token count and what the
                   alternative KV shipment would have cost on the wire)
+    watchdog      a streaming SLO/anomaly trip: which rule fired, on which
+                  signal (step seconds, a link's seconds, serving tokens/s),
+                  the observed value vs the reference it violated
 
 All records share ``kind``, ``step`` (data step) and ``clock`` (simulated
 seconds).  :meth:`FlightRecorder.to_jsonl` / :func:`read_jsonl` round-trip
@@ -139,6 +142,24 @@ class DetectorRecord:
     severity: float
     believed_factor: float
     kind: str = "detector"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class WatchdogRecord:
+    """One watchdog trip (``rule``: slo | ewma | mad)."""
+
+    step: int                         # training step or serving round
+    clock: float                      # simulated seconds
+    rule: str                         # slo | ewma | mad
+    signal: str                       # step_seconds | link 3->5 | tokens_per_s
+    value: float                      # the observation that tripped
+    reference: float                  # SLO bound / EWMA mean / window median
+    severity: float                   # |value - reference| / reference
+    message: str = ""
+    kind: str = "watchdog"
 
     def to_dict(self) -> Dict[str, Any]:
         return dataclasses.asdict(self)

@@ -12,8 +12,14 @@ Renders, from the recorder's loss-free JSONL events (see
   under stage compute, the overlap Eq. 3 banks on;
 * a **straggler heatmap** — per device × step busy seconds, row-normalized,
   so a degraded node shows as a bright row the moment it slows;
+* the **critical path** — the blame table from
+  :mod:`repro.obs.critpath`: which device/link/codec the step time is
+  actually waiting on, and for how many seconds per step;
+* **top interventions** — Amdahl upper bounds per blamed resource ("if
+  this link were free the step could shrink by at most X s"); exact
+  counterfactual pricing lives in :mod:`repro.obs.whatif`;
 * the **decision log** — the flight recorder's calibration / re-plan /
-  epoch / detector records, one line each, in order.
+  epoch / detector / watchdog records, one line each, in order.
 
 All rendering is pure (lists in, string out) so tests assert on content, and
 the CLI is a thin wrapper.
@@ -207,6 +213,12 @@ def render_flight(records: Sequence[Mapping[str, Any]]) -> str:
             lines.append(f"{head} node={r.get('node')} "
                          f"severity={float(r.get('severity', 0.0)):.3g} "
                          f"believed={float(r.get('believed_factor', 0.0)):.3g}")
+        elif kind == "watchdog":
+            lines.append(f"{head} {r.get('rule')} on {r.get('signal')!r}: "
+                         f"value={float(r.get('value', 0.0)):.4g} vs "
+                         f"ref={float(r.get('reference', 0.0)):.4g} "
+                         f"(severity {float(r.get('severity', 0.0)):.3g})"
+                         f"{' ' + r['message'] if r.get('message') else ''}")
         elif kind == "route":
             arrow = "" if r.get("cause") != "reroute" \
                 else f" {r.get('old_chain')} ->"
@@ -218,6 +230,42 @@ def render_flight(records: Sequence[Mapping[str, Any]]) -> str:
         else:
             lines.append(f"{head} {dict(r)}")
     return "\n".join(lines)
+
+
+# ----------------------------------------------------------- critical path
+def render_interventions(rows: Sequence[Any], n_attempts: int,
+                         top: int = 5) -> str:
+    """Amdahl upper bounds from blame rows: eliminating a resource outright
+    can shave at most its critical-path seconds off each step.  (The exact
+    counterfactual number — re-planned, re-overlapped — comes from
+    :mod:`repro.obs.whatif`; this section ranks what is *worth* re-pricing.)
+    """
+    ranked = [r for r in rows if r.kind != "stall"][:top]
+    if not ranked or n_attempts == 0:
+        return "(nothing on the critical path to intervene on)"
+    lines = []
+    for i, r in enumerate(ranked):
+        lines.append(f"{i + 1}. if {r.kind} {r.track or '?'} were free: "
+                     f"<= {r.mean_seconds:.4g} s/step back "
+                     f"({r.share * 100:.1f}% of the critical path, "
+                     f"on-path {r.steps_on_path}/{r.n_steps} steps)")
+    return "\n".join(lines)
+
+
+def render_critpath(events: Sequence[TraceEvent], top: int = 8
+                    ) -> Tuple[str, str]:
+    """(blame-table text, interventions text) for :func:`build_report`."""
+    from . import critpath
+    decomps = critpath.analyze(events)
+    if not decomps:
+        return ("(no attributable sim spans in trace)",
+                "(nothing on the critical path to intervene on)")
+    rows = critpath.blame(decomps)
+    mean_make = sum(d.makespan for d in decomps) / len(decomps)
+    header = (f"{len(decomps)} step attempt(s), "
+              f"mean makespan {mean_make:.4g}s")
+    return (header + "\n" + critpath.render_blame(rows, top=top),
+            render_interventions(rows, len(decomps)))
 
 
 # ------------------------------------------------------------------ report
@@ -245,6 +293,13 @@ def build_report(events: Sequence[TraceEvent],
     parts.append("")
     parts.append("== straggler heatmap " + "=" * max(0, width - 21))
     parts.append(render_heatmap(tracks, steps, matrix))
+    blame_text, iv_text = render_critpath(events)
+    parts.append("")
+    parts.append("== critical path " + "=" * max(0, width - 17))
+    parts.append(blame_text)
+    parts.append("")
+    parts.append("== top interventions " + "=" * max(0, width - 21))
+    parts.append(iv_text)
     parts.append("")
     parts.append("== decision log " + "=" * max(0, width - 16))
     parts.append(render_flight(flight or []))
@@ -257,8 +312,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--flight", default=None,
                     help="flight-recorder JSONL (FlightRecorder.to_jsonl)")
     ap.add_argument("--width", type=int, default=80)
+    ap.add_argument("--allow-truncated", action="store_true",
+                    help="render even when the trace header reports dropped "
+                         "events (ring-buffer overflow)")
     args = ap.parse_args(argv)
-    events = events_from_dicts(read_jsonl(args.trace))
+    dicts = read_jsonl(args.trace)
+    from .export import read_header
+    header = read_header(dicts)
+    dropped = int((header or {}).get("n_dropped", 0))
+    if dropped > 0 and not args.allow_truncated:
+        print(f"{args.trace}: REFUSED — header reports {dropped} dropped "
+              f"events (ring-buffer overflow); pass --allow-truncated to "
+              f"render anyway.", file=sys.stderr)
+        return 2
+    events = events_from_dicts(dicts)
     flight = flight_record.read_jsonl(args.flight) if args.flight else None
     print(build_report(events, flight, width=args.width))
     return 0

@@ -36,6 +36,23 @@ def _fmt_value(v: Any) -> str:
     return str(v)
 
 
+class _StderrHandler(logging.StreamHandler):
+    """StreamHandler that re-reads ``sys.stderr`` at emit time, so capture
+    or redirect wrappers installed *after* :func:`configure` (pytest capsys,
+    ``contextlib.redirect_stderr``) still receive output."""
+
+    def __init__(self):
+        super().__init__(sys.stderr)
+
+    @property
+    def stream(self):
+        return sys.stderr
+
+    @stream.setter
+    def stream(self, value):   # base-class ctor assigns; stay late-bound
+        pass
+
+
 def configure(level: str = "info", stream=None) -> None:
     """Install (once) a plain ``message``-only handler on the ``repro``
     logger hierarchy and set its level.  ``level`` accepts the usual names
@@ -47,7 +64,8 @@ def configure(level: str = "info", stream=None) -> None:
         raise ValueError(f"unknown log level {level!r}")
     logger = logging.getLogger(_ROOT)
     if not _CONFIGURED:
-        handler = logging.StreamHandler(stream or sys.stderr)
+        handler = logging.StreamHandler(stream) if stream is not None \
+            else _StderrHandler()
         handler.setFormatter(logging.Formatter("%(message)s"))
         logger.addHandler(handler)
         logger.propagate = False

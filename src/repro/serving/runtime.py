@@ -40,13 +40,12 @@ import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelCfg
 from repro.elastic.membership import MembershipView
 from repro.obs import (CAT_CONTROLLER, CAT_FWD, CAT_SERVE_PREFILL,
                        CAT_SERVE_REPLAY, CAT_TRANSFER, FlightRecorder,
-                       MetricsRegistry, TraceRecorder)
+                       Histogram, MetricsRegistry, TraceRecorder, Watchdog)
 
 from .batching import RequestQueue
 from .plan import ServingPlan
@@ -78,11 +77,16 @@ class ServingReport:
 
 
 def _percentiles(latencies: Sequence[float]) -> Tuple[float, float]:
+    """p50/p99 in ms via the obs Histogram's bucketed percentile (base 1.01:
+    within ~1% of the exact sample percentile) — one percentile
+    implementation across serving and watchdogs, not a second hand-rolled
+    np.percentile path."""
     if not latencies:
         return 0.0, 0.0
-    arr = np.asarray(latencies, dtype=np.float64)
-    return (float(np.percentile(arr, 50)) * 1e3,
-            float(np.percentile(arr, 99)) * 1e3)
+    h = Histogram(base=1.01)
+    for lt in latencies:
+        h.observe(float(lt))
+    return h.percentile(50) * 1e3, h.percentile(99) * 1e3
 
 
 class ServingRuntime:
@@ -94,6 +98,7 @@ class ServingRuntime:
                  metrics: Optional[MetricsRegistry] = None,
                  flight: Optional[FlightRecorder] = None,
                  on_token: Optional[OnToken] = None,
+                 watchdog: Optional[Watchdog] = None,
                  max_rounds: int = 100_000):
         self.cfg = cfg
         self.plan = plan
@@ -103,6 +108,14 @@ class ServingRuntime:
         self.flight = flight
         self.on_token = on_token
         self.max_rounds = int(max_rounds)
+        # streaming SLO/anomaly monitor: fed one aggregate tokens/s sample
+        # per decode round (trips land in the shared flight recorder)
+        self.watchdog = watchdog
+        if watchdog is not None:
+            if watchdog.flight is None:
+                watchdog.flight = flight
+            if watchdog.metrics is None:
+                watchdog.metrics = metrics
         self.router = SessionRouter(plan, flight=flight, metrics=metrics)
         # one executor per stage, shared by all its replicas (identical
         # parameters => identical jitted computation)
@@ -176,6 +189,7 @@ class ServingRuntime:
 
         while active or not queue.empty:
             rnd += 1
+            tokens_at_round_start = total_tokens
             if rnd > self.max_rounds:
                 raise RuntimeError(
                     f"serving made no progress after {self.max_rounds} "
@@ -329,7 +343,13 @@ class ServingRuntime:
                 else:
                     still.append(sess)
             active = still
+            prev_now = now
             now = round_end if round_end > now else now + 1e-9
+            if self.watchdog is not None:
+                made = total_tokens - tokens_at_round_start
+                dt = now - prev_now
+                if made > 0 and dt > 0.0:
+                    self.watchdog.observe_tokens(rnd, now, made / dt)
 
         if self.metrics is not None:
             h = self.metrics.histogram("serve.token_latency_ms")

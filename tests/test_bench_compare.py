@@ -8,7 +8,9 @@ import os
 
 import pytest
 
-from benchmarks.compare import compare, load_result, main
+from benchmarks.compare import (append_history, compare, history_gate,
+                                history_path_for, load_result, main,
+                                tracked_only)
 
 BASELINE = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
                         "baselines", "BENCH_baseline_joint.json")
@@ -114,6 +116,83 @@ def test_write_baseline_round_trip(tmp_path):
     assert "wall_seconds" not in refreshed
     assert compare(_base(), refreshed) == []
     assert main([str(new_p), str(base_p)]) == 0
+
+
+def _entries(paces):
+    return [{"source": f"run{i}",
+             "result": {"joint": {"pace": p, "phi": 1.0 / p}}}
+            for i, p in enumerate(paces)]
+
+
+def test_history_gate_monotone_degradation_fails():
+    """Acceptance: three consecutive runs each strictly worse trip the
+    trend gate even when every single step is inside the 10% margin."""
+    violations = history_gate(_entries([0.025, 0.026, 0.027]))
+    # pace rising AND phi falling monotonically -> both flagged
+    assert len(violations) == 2
+    assert any("joint.pace" in v and "rising" in v for v in violations)
+    assert any("joint.phi" in v and "falling" in v for v in violations)
+
+
+def test_history_gate_non_monotone_passes():
+    assert history_gate(_entries([0.025, 0.027, 0.026])) == []
+    assert history_gate(_entries([0.027, 0.026, 0.025])) == []   # improving
+
+
+def test_history_gate_needs_full_window():
+    assert history_gate(_entries([0.025, 0.026])) == []
+    # only the trailing window counts: an old spike then flat is clean
+    assert history_gate(_entries([0.030, 0.025, 0.025, 0.025])) == []
+
+
+def test_history_gate_ignores_missing_series():
+    entries = _entries([0.025, 0.026, 0.027])
+    del entries[0]["result"]["joint"]["phi"]
+    violations = history_gate(entries)
+    assert len(violations) == 1 and "joint.pace" in violations[0]
+
+
+def test_append_history_round_trip(tmp_path):
+    hist = str(tmp_path / "HISTORY_joint_planning.jsonl")
+    for i, pace in enumerate((0.025, 0.026)):
+        result = {"joint": {"pace": pace, "phi": 1.0 / pace,
+                            "iter_s": 0.1},    # untracked: stripped
+                  "wall_seconds": 9.0}
+        entries = append_history(result, hist, source=f"run{i}")
+    assert len(entries) == 2
+    with open(hist) as f:
+        lines = [json.loads(line) for line in f if line.strip()]
+    assert [e["source"] for e in lines] == ["run0", "run1"]
+    assert lines[0]["result"] == {"joint": {"pace": 0.025, "phi": 40.0}}
+
+
+def test_tracked_only_strips_annotations():
+    out = tracked_only({"joint": {"pace": 0.02, "phi": 50.0, "iter_s": 1.0},
+                        "wall_seconds": 9.0, "empty": {"iter_s": 2.0}})
+    assert out == {"joint": {"pace": 0.02, "phi": 50.0}}
+
+
+def test_history_path_naming():
+    assert history_path_for("BENCH_joint_planning.json", "benchmarks/baselines") \
+        == os.path.join("benchmarks", "baselines",
+                        "HISTORY_joint_planning.jsonl")
+    assert history_path_for("/x/y/other.json", "d") \
+        == os.path.join("d", "HISTORY_other.jsonl")
+
+
+def test_cli_history_gate(tmp_path):
+    """--history appends and fails only once the monotone window fills."""
+    hist_dir = str(tmp_path / "baselines")
+    new_p = tmp_path / "BENCH_trend.json"
+    for pace, want in ((0.025, 0), (0.026, 0), (0.027, 1)):
+        result = copy.deepcopy(_base())
+        result["joint"]["pace"] = pace
+        new_p.write_text(json.dumps({"result": result}))
+        assert main([str(new_p), "--history", "--history-dir",
+                     hist_dir]) == want
+    # baseline-less invocation without --history is a usage error
+    with pytest.raises(SystemExit):
+        main([str(new_p)])
 
 
 def test_committed_baseline_separates_joint_from_opfence():

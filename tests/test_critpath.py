@@ -1,0 +1,564 @@
+"""Critical-path analyzer, what-if re-pricing, and watchdog tests.
+
+The heavyweight fixture mirrors ``benchmarks/churn.py::closed_loop``
+(fat-pipe topology, slowlink degradation, calibrated joint controller) and
+pins the PR's acceptance story end to end:
+
+* the degradation-window blame table names the degraded link as the top
+  bottleneck;
+* the what-if engine's best link fix is the pair whose fitted correction
+  the controller adopts at the calibration re-plan;
+* what-if predictions land within 5% of ground-truth simulations;
+* the watchdog trips steps *before* the controller re-plans;
+* trace-derived busy accounting agrees with the controller's
+  ``sim_*_busy_seconds`` counters (the CI attribution gate).
+"""
+import json
+import math
+
+import pytest
+
+from repro.configs.base import ModelCfg
+from repro.core import network
+from repro.core.compression import plan_adatopk
+from repro.core.costmodel import EdgeCostModel
+from repro.core.executor import LinkTiming, StepTiming, simulate_iteration
+from repro.core.network import with_link_slowdowns
+from repro.core.scheduler import schedule_joint, schedule_opfence
+from repro.elastic import ChurnEvent, ChurnTrace, ElasticController
+from repro.models.opgraph_models import profile_opgraph
+from repro.obs import (FlightRecorder, Histogram, MetricsRegistry,
+                       TraceRecorder, Watchdog)
+from repro.obs import critpath, whatif
+from repro.obs import export as obs_export
+from repro.obs import report as obs_report
+from repro.obs.trace import (CAT_ENCODE, CAT_FWD, CAT_TRANSFER, CLOCK_SIM,
+                             TraceEvent)
+from helpers import mlp_chain
+
+
+# ---------------------------------------------------------- hand-built DAG --
+def _span(seq, cat, name, track, ts, dur, **args):
+    return TraceEvent(seq=seq, clock=CLOCK_SIM, phase="X", cat=cat,
+                      name=name, track=track, ts=ts, dur=dur,
+                      args={"step": 0, "epoch": 0, **args})
+
+
+def test_critpath_hand_built_chain():
+    # compute -> encode -> transfer -> compute, back-to-back (no stalls)
+    events = [
+        _span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 1.0),
+        _span(1, CAT_ENCODE, "Fenc.mb0", "codec0", 1.0, 0.5),
+        _span(2, CAT_TRANSFER, "Fxfer.mb0", "link 0->1", 1.5, 1.0),
+        _span(3, CAT_FWD, "F1.mb0", "dev1", 2.5, 1.5),
+    ]
+    decomps = critpath.analyze(events)
+    assert len(decomps) == 1
+    d = decomps[0]
+    assert d.attempt == (0, 0)
+    assert d.makespan == pytest.approx(4.0)
+    assert d.compute == pytest.approx({"dev0": 1.0, "dev1": 1.5})
+    assert d.codec == pytest.approx({"codec0": 0.5})
+    assert d.wire == pytest.approx({"link 0->1": 1.0})
+    assert d.stall == pytest.approx(0.0)
+    assert d.total() == pytest.approx(d.makespan)
+    # path is rendered in execution order
+    assert [s.name for s in d.segments] == \
+        ["F0.mb0", "Fenc.mb0", "Fxfer.mb0", "F1.mb0"]
+    assert critpath.audit(decomps) == []
+
+
+def test_critpath_stall_gap():
+    # a gap no span covers becomes an explicit stall segment
+    events = [
+        _span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 1.0),
+        _span(1, CAT_FWD, "F1.mb0", "dev1", 2.0, 1.0),
+    ]
+    d = critpath.analyze(events)[0]
+    assert d.stall == pytest.approx(1.0)
+    assert d.total() == pytest.approx(d.makespan) == pytest.approx(3.0)
+    kinds = [s.kind for s in d.segments]
+    assert kinds == [critpath.KIND_COMPUTE, critpath.KIND_STALL,
+                     critpath.KIND_COMPUTE]
+
+
+def test_critpath_prefers_causal_feed_over_tie():
+    # two spans end exactly when the transfer starts; the causal producer
+    # (same tag/mb, on the transfer's source device) must win the tie
+    events = [
+        _span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 1.0),
+        _span(1, CAT_FWD, "F5.mb0", "dev5", 0.0, 1.0),   # bystander
+        _span(2, CAT_TRANSFER, "Fxfer.mb0", "link 0->1", 1.0, 1.0),
+        _span(3, CAT_FWD, "F1.mb0", "dev1", 2.0, 1.0),
+    ]
+    d = critpath.analyze(events)[0]
+    assert "dev0" in d.compute and "dev5" not in d.compute
+
+
+def test_blame_aggregation_shares():
+    events = [
+        _span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 1.0),
+        _span(1, CAT_TRANSFER, "Fxfer.mb0", "link 0->1", 1.0, 3.0),
+        _span(2, CAT_FWD, "F1.mb0", "dev1", 4.0, 1.0),
+    ]
+    rows = critpath.blame(critpath.analyze(events))
+    assert rows[0].kind == "wire" and rows[0].track == "link 0->1"
+    assert rows[0].share == pytest.approx(3.0 / 5.0)
+    assert sum(r.share for r in rows) == pytest.approx(1.0)
+    assert all(rows[i].crit_seconds >= rows[i + 1].crit_seconds
+               for i in range(len(rows) - 1))
+
+
+def test_sim_trace_decomposition_is_exact():
+    # a real simulator trace decomposes with zero stall and busy totals
+    # matching the SimResult's own accounting
+    g, shapes, _, _ = mlp_chain(n_layers=6, d=16, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.homogeneous_lan(n=4)
+    sch = schedule_opfence(g, prof, cluster)
+    rec = TraceRecorder()
+    sim = simulate_iteration(g, prof, sch, cluster, n_micro=4, trace=rec)
+    events = list(rec.events())
+    decomps = critpath.analyze(events)
+    assert len(decomps) == 1
+    d = decomps[0]
+    assert d.makespan == pytest.approx(sim.iteration_time, rel=1e-9)
+    assert critpath.audit(decomps) == []
+    busy = critpath.busy_accounting(events)
+    assert busy["compute"] == pytest.approx(sum(sim.device_busy), rel=1e-9)
+    assert busy["wire"] == pytest.approx(sim.link_busy, rel=1e-9)
+    totals = {"sim_device_busy_seconds": sum(sim.device_busy),
+              "sim_link_busy_seconds": sim.link_busy,
+              "sim_compress_busy_seconds": sim.compress_busy}
+    assert critpath.check_sim_busy(busy, totals) == []
+
+
+# ------------------------------------------------- closed-loop acceptance --
+@pytest.fixture(scope="module")
+def closed_loop():
+    """The churn closed-loop scenario, calibrated controller only, with the
+    full obs kit attached (14 steps: degradation at 4*t1, calibration
+    re-plan around step 9)."""
+    cfg = ModelCfg(name="gpt-churn-tiny", family="dense", n_layers=4,
+                   d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+                   vocab=128, rope_fraction=0.0, max_seq=64,
+                   norm="layernorm", act="gelu")
+    batch, seq = 2, 64
+    cluster = network.fat_pipe_sites(n=8, n_sites=2, seed=0)
+    graph = profile_opgraph(cfg, batch, seq)
+    prof = graph.annotate({"tokens": (batch, seq), "labels": (batch, seq)})
+    common = dict(n_micro=8, planner="joint", joint_ratio=16.0,
+                  detector_threshold=20.0, calibrate_min_samples=3,
+                  replan_pace_margin=0.2)
+    probe = ElasticController(graph, prof, cluster, ChurnTrace(()),
+                              calibrate_interval=0, **common)
+    t1 = probe.run(steps=1).steps[0].step_seconds
+    # victim selection identical to benchmarks/churn.py::closed_loop
+    devs = probe.schedule.stage_devices()
+    model = EdgeCostModel(graph, prof, cluster, probe.plan)
+    placement = probe.schedule.placement
+    boundary_s = {}
+    for (a, n) in model.cross_edges(placement):
+        key = (placement[a], placement[n])
+        boundary_s[key] = boundary_s.get(key, 0.0) + \
+            model.edge_seconds(a, n, *key)
+    wan_bw = min(cluster.link(a, b).bandwidth for a, b in zip(devs, devs[1:]))
+    adjacent = {d: [] for d in devs}
+    for a, b in zip(devs, devs[1:]):
+        adjacent[a].append((a, b))
+        adjacent[b].append((a, b))
+    eligible = [d for d in devs
+                if all(cluster.link(i, j).bandwidth > 10.0 * wan_bw
+                       for (i, j) in adjacent[d])]
+    victim = max(eligible, key=lambda d: sum(boundary_s.get(p, 0.0)
+                                             for p in adjacent[d]))
+    t_deg = 4.0 * t1
+    churn = ChurnTrace((ChurnEvent(time=t_deg, kind="slowlink",
+                                   node=victim, factor=0.5),))
+    kit = dict(tracer=TraceRecorder(), flight=FlightRecorder(),
+               metrics=MetricsRegistry(), watchdog=Watchdog())
+    ctrl = ElasticController(graph, prof, cluster, churn,
+                             calibrate_interval=3, **kit, **common)
+    res = ctrl.run(steps=14)
+    replans = [r for r in kit["flight"].records("replan")
+               if r.cause == "calibration"]
+    assert replans, "the closed loop must re-plan on calibration"
+    replan_step = replans[0].step
+    # StepRecord.step is 1-based; the trace stamps 0-based data steps, so
+    # attempt k corresponds to record step k+1 (the replan record already
+    # speaks attempt numbering: the attempt at replan_step runs the new plan)
+    first_deg = min(s.step for s in res.steps if s.clock > t_deg) - 1
+    events = list(kit["tracer"].events())
+    decomps = critpath.analyze(events)
+    window = [d for d in decomps
+              if d.attempt[0] is not None
+              and first_deg <= d.attempt[0] < replan_step]
+    assert window, "degradation window must contain analyzed attempts"
+    return dict(graph=graph, prof=prof, cluster=cluster, victim=victim,
+                t_deg=t_deg, ctrl=ctrl, res=res, kit=kit, events=events,
+                decomps=decomps, window=window, replan_step=replan_step,
+                first_deg=first_deg, n_micro=common["n_micro"],
+                joint_ratio=common["joint_ratio"])
+
+
+def test_trace_decompositions_match_step_times(closed_loop):
+    by_step = {s.step - 1: s.step_seconds for s in closed_loop["res"].steps}
+    for d in closed_loop["decomps"]:
+        assert d.makespan == pytest.approx(by_step[d.attempt[0]], rel=1e-9)
+        assert d.total() == pytest.approx(d.makespan, rel=1e-6)
+    assert critpath.audit(closed_loop["decomps"]) == []
+
+
+def test_blame_names_degraded_link(closed_loop):
+    """Acceptance: in the degradation window the blame table's top row is a
+    link adjacent to the slowlink victim."""
+    rows = critpath.blame(closed_loop["window"])
+    top = rows[0]
+    assert top.kind == "wire"
+    m = whatif._LINK_TRACK_RE.match(top.track)
+    assert m, top.track
+    pair = (int(m.group(1)), int(m.group(2)))
+    assert closed_loop["victim"] in pair
+    # the degraded pair dominates: on the path every window step, with a
+    # larger share than any other single resource
+    assert top.steps_on_path == top.n_steps == len(closed_loop["window"])
+    assert top.share > rows[2].share * 2
+
+
+def test_watchdog_fires_before_replan(closed_loop):
+    """Acceptance: the symptom (watchdog trip) lands steps before the cure
+    (the calibration re-plan)."""
+    wd = closed_loop["kit"]["watchdog"]
+    first = wd.first_trip()
+    assert first is not None
+    assert first.step < closed_loop["replan_step"]
+    # the per-link detectors name a degraded wire, the same label the
+    # calibrator corrects
+    link_trip = wd.first_trip(signal_prefix="link ")
+    assert link_trip is not None and link_trip.step < closed_loop["replan_step"]
+    m = whatif._LINK_TRACK_RE.match(link_trip.signal)
+    assert m and closed_loop["victim"] in (int(m.group(1)), int(m.group(2)))
+    # trips reached flight log and metrics too
+    kinds = [r.kind for r in closed_loop["kit"]["flight"].records("watchdog")]
+    assert kinds and set(kinds) == {"watchdog"}
+    snap = closed_loop["kit"]["metrics"].snapshot()
+    assert any(k.startswith("watchdog_trips") and v > 0
+               for k, v in snap.items())
+
+
+def _degraded_scenario(cl):
+    """The pre-replan window as a what-if Scenario: spec-planned joint
+    schedule, degraded ground-truth cluster (lazy cost model)."""
+    joint = schedule_joint(cl["graph"], cl["prof"], cl["cluster"],
+                          cl["joint_ratio"])
+    degraded = with_link_slowdowns(cl["cluster"], {cl["victim"]: 0.5})
+    sc = whatif.Scenario(graph=cl["graph"], profiles=cl["prof"],
+                         schedule=joint.schedule, cluster=degraded,
+                         plan=joint.plan, n_micro=cl["n_micro"])
+    return sc, joint
+
+
+def test_scenario_reprices_recorded_window(closed_loop):
+    # the Scenario reconstruction reproduces the recorded degraded step time
+    sc, _ = _degraded_scenario(closed_loop)
+    window_secs = [s.step_seconds for s in closed_loop["res"].steps
+                   if closed_loop["first_deg"] <= s.step - 1
+                   < closed_loop["replan_step"]]
+    assert sc.price() == pytest.approx(window_secs[0], rel=1e-9)
+
+
+def test_whatif_top_link_matches_adopted_replan(closed_loop):
+    """Acceptance: the best link fix the what-if engine ranks is a pair the
+    calibration re-plan actually adopted a correction for."""
+    sc, _ = _degraded_scenario(closed_loop)
+    rows = critpath.blame(closed_loop["window"])
+    ranked = whatif.rank(sc, whatif.default_interventions(sc, rows))
+    assert all(r.baseline_seconds == pytest.approx(sc.price(), rel=1e-9)
+               for r in ranked)
+    fitted = closed_loop["ctrl"].link_corrections
+    assert fitted, "calibration must have adopted corrections"
+    top_link = next(r for r in ranked if r.name.startswith("link "))
+    # parse "link a->b 2x"
+    a, b = top_link.name.split()[1].split("->")
+    pair = (int(a), int(b))
+    assert pair in fitted
+    assert top_link.delta_seconds > 0
+    # and it is the *heaviest* fitted pair (largest adopted correction)
+    assert fitted[pair] == pytest.approx(max(fitted.values()))
+
+
+def test_whatif_within_5pct_of_simulation(closed_loop):
+    """Acceptance: what-if predictions within 5% of ground-truth sims on
+    >= 3 scenarios."""
+    cl = closed_loop
+    sc, joint = _degraded_scenario(cl)
+    spec_truth = whatif.Scenario(
+        graph=cl["graph"], profiles=cl["prof"], schedule=joint.schedule,
+        cluster=cl["cluster"], plan=joint.plan, n_micro=cl["n_micro"]).price()
+
+    # 1. restore every link touching the victim (2x corrections) vs the
+    #    ground-truth spec cluster: corrections scale alpha+beta while the
+    #    degradation scaled beta only, hence the 5% budget
+    pred = whatif.node_links_speedup(cl["victim"], 2.0).apply(sc).price()
+    assert pred == pytest.approx(spec_truth, rel=0.05)
+
+    # 2. restore only the victim's pipeline-adjacent directed pairs (the
+    #    exact pairs calibration corrected); non-pipeline links carry no
+    #    traffic, so spec-cluster simulation is still the ground truth
+    restored = sc
+    for (i, j) in cl["ctrl"].link_corrections:
+        restored = whatif.link_speedup(i, j, 2.0).apply(restored)
+    assert restored.price() == pytest.approx(spec_truth, rel=0.05)
+
+    # 3. codec free: prediction must equal an independently built sim with
+    #    the kernel costs stripped
+    truth3 = simulate_iteration(
+        cl["graph"], cl["prof"], sc.schedule, sc.cluster, plan=sc.plan,
+        n_micro=sc.n_micro,
+        cost_model=sc.model().with_kernel_costs({})).iteration_time
+    assert whatif.codec_free().apply(sc).price() == \
+        pytest.approx(truth3, rel=0.05)
+
+    # 4. ratio change: prediction must equal a sim under an independently
+    #    re-planned AdaTopK allocation at the new ratio
+    new_ratio = 2.0 * cl["joint_ratio"]
+    plan4 = plan_adatopk(cl["graph"], cl["prof"], sc.cluster,
+                         sc.schedule.placement, new_ratio,
+                         cost_model=sc.model().with_plan(None))
+    truth4 = simulate_iteration(
+        cl["graph"], cl["prof"], sc.schedule, sc.cluster, plan=plan4,
+        n_micro=sc.n_micro,
+        cost_model=sc.model().with_plan(plan4)).iteration_time
+    assert whatif.ratio_change(new_ratio).apply(sc).price() == \
+        pytest.approx(truth4, rel=0.05)
+
+
+def test_trace_busy_matches_sim_counters(closed_loop):
+    """The CI attribution gate: trace busy accounting vs the controller's
+    streamed SimResult counters, 1% budget."""
+    snap = closed_loop["kit"]["metrics"].snapshot()
+    totals = {k: snap[k] for k in ("sim_device_busy_seconds",
+                                   "sim_link_busy_seconds",
+                                   "sim_compress_busy_seconds") if k in snap}
+    assert "sim_device_busy_seconds" in totals
+    busy = critpath.busy_accounting(closed_loop["events"])
+    assert critpath.check_sim_busy(busy, totals, rel=0.01) == []
+
+
+def test_report_renders_critpath_sections(closed_loop):
+    text = obs_report.build_report(
+        closed_loop["events"],
+        [r.to_dict() for r in closed_loop["kit"]["flight"].records()])
+    assert "== critical path ==" in text
+    assert "== top interventions ==" in text
+    assert "watchdog" in text
+
+
+# ------------------------------------------------------------- watchdogs --
+def test_watchdog_warmup_then_trip():
+    wd = Watchdog()
+    for i in range(8):
+        wd.observe_step(i, float(i), 1.0)
+    assert wd.records == []
+    wd.observe_step(8, 8.0, 2.0)
+    rules = {r.rule for r in wd.records}
+    assert {"ewma", "mad"} <= rules
+    assert wd.first_trip().signal == "step_seconds"
+
+
+def test_watchdog_no_trip_during_warmup():
+    wd = Watchdog(warmup=3)
+    wd.observe_step(0, 0.0, 1.0)
+    wd.observe_step(1, 1.0, 50.0)   # wild, but still warming up
+    assert wd.records == []
+
+
+def test_watchdog_holdoff_dedupes():
+    wd = Watchdog(holdoff=8)
+    for i in range(8):
+        wd.observe_step(i, float(i), 1.0)
+    for i in range(8, 13):
+        wd.observe_step(i, float(i), 2.0)
+    ewma_trips = [r for r in wd.records if r.rule == "ewma"]
+    assert len(ewma_trips) == 1   # one incident, one record
+
+
+def test_watchdog_step_slo_p99():
+    wd = Watchdog(step_slo_p99=1.5)
+    for i in range(5):
+        wd.observe_step(i, float(i), 1.0)
+    assert wd.first_trip(rule="slo") is None
+    for i in range(5, 10):
+        wd.observe_step(i, float(i), 2.0)
+    slo = wd.first_trip(rule="slo")
+    assert slo is not None and slo.signal == "step_seconds_p99"
+    assert slo.value > 1.5 and slo.reference == pytest.approx(1.5)
+
+
+def test_watchdog_tokens_floor():
+    wd = Watchdog(tokens_floor=10.0)
+    for i in range(3):
+        wd.observe_tokens(i, float(i), 20.0)
+    assert wd.first_trip(rule="slo") is None
+    wd.observe_tokens(3, 3.0, 5.0)
+    slo = wd.first_trip(rule="slo")
+    assert slo is not None and slo.signal == "tokens_per_s"
+
+
+def test_watchdog_bus_sink_protocol():
+    wd = Watchdog()
+    for step in range(8):
+        wd.record(StepTiming(node=3, stage=0, micro_batch=0, backward=False,
+                             compute_seconds=1.0, comm_seconds=0.0,
+                             step=step))
+        wd.record_link(LinkTiming(src=0, dst=1, nbytes=100.0, seconds=1e-3,
+                                  step=step))
+    wd.record(StepTiming(node=3, stage=0, micro_batch=0, backward=False,
+                         compute_seconds=2.0, comm_seconds=0.0, step=8))
+    wd.record_link(LinkTiming(src=0, dst=1, nbytes=100.0, seconds=2e-3,
+                              step=8))
+    signals = {r.signal for r in wd.records}
+    assert "stage3_seconds" in signals
+    assert "link 0->1" in signals
+
+
+def test_watchdog_link_normalizes_per_byte():
+    # doubled payload at the same bandwidth is NOT an anomaly
+    wd = Watchdog()
+    for step in range(8):
+        wd.record_link(LinkTiming(src=0, dst=1, nbytes=100.0, seconds=1e-3,
+                                  step=step))
+    wd.record_link(LinkTiming(src=0, dst=1, nbytes=200.0, seconds=2e-3,
+                              step=8))
+    assert wd.records == []
+
+
+# -------------------------------------------------- histogram percentile --
+def test_histogram_percentile_error_bound():
+    h = Histogram(base=1.01)
+    values = [float(v) for v in range(1, 101)]
+    for v in values:
+        h.observe(v)
+    for q in (50.0, 90.0, 99.0):
+        true = sorted(values)[max(0, math.ceil(q / 100 * len(values)) - 1)]
+        got = h.percentile(q)
+        # documented bound: within one bucket factor above the truth
+        assert true <= got <= true * 1.01 * 1.0001
+
+
+def test_histogram_percentile_clamps_to_observed_range():
+    h = Histogram(base=1.01)
+    h.observe(5.0)
+    h.observe(7.0)
+    assert h.percentile(100.0) == pytest.approx(7.0)
+    assert h.percentile(0.001) >= 5.0
+
+
+def test_histogram_percentile_rejects_bad_input():
+    h = Histogram()
+    with pytest.raises(ValueError):
+        h.percentile(50.0)          # empty
+    h.observe(1.0)
+    with pytest.raises(ValueError):
+        h.percentile(0.0)
+    with pytest.raises(ValueError):
+        h.percentile(101.0)
+
+
+# ---------------------------------------------------- report interval math --
+def test_union_merges_and_drops_degenerate():
+    u = obs_report._union([(3.0, 4.0), (0.0, 1.0), (2.0, 2.0), (0.5, 1.5)])
+    assert u == [(0.0, 1.5), (3.0, 4.0)]
+    # touching intervals merge
+    assert obs_report._union([(0.0, 1.0), (1.0, 2.0)]) == [(0.0, 2.0)]
+    assert obs_report._union([]) == []
+    # zero-length only
+    assert obs_report._union([(1.0, 1.0)]) == []
+
+
+def test_intersect_edges():
+    a = obs_report._union([(0.0, 2.0), (4.0, 6.0)])
+    b = obs_report._union([(1.0, 5.0)])
+    assert obs_report._intersect(a, b) == pytest.approx(2.0)
+    # touching but disjoint
+    assert obs_report._intersect([(0.0, 1.0)], [(1.0, 2.0)]) == \
+        pytest.approx(0.0)
+    assert obs_report._intersect([], [(0.0, 1.0)]) == pytest.approx(0.0)
+
+
+def test_overlap_fraction_on_synthetic_trace():
+    events = [
+        _span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 2.0),
+        _span(1, CAT_TRANSFER, "Fxfer.mb0", "link 0->1", 1.0, 2.0),
+    ]
+    # transfer [1,3], compute [0,2]: 1s of 2s wire time overlapped
+    assert obs_report.overlap_fraction(events) == pytest.approx(0.5)
+    assert obs_report.overlap_fraction(
+        [_span(0, CAT_FWD, "F0.mb0", "dev0", 0.0, 1.0)]) is None
+
+
+# -------------------------------------------------- truncation surfacing --
+def _overflowed_recorder():
+    rec = TraceRecorder(capacity=4)
+    for i in range(8):
+        rec.span(CAT_FWD, f"F0.mb{i}", "dev0", float(i), float(i) + 0.5,
+                 args={"step": 0, "epoch": 0, "mb": i})
+    return rec
+
+
+def test_jsonl_header_stamps_drops(tmp_path):
+    rec = _overflowed_recorder()
+    path = str(tmp_path / "TRACE_t.jsonl")
+    metrics = MetricsRegistry()
+    obs_export.write_jsonl(rec, path, metrics=metrics)
+    dicts = obs_export.read_jsonl(path)
+    header = obs_export.read_header(dicts)
+    assert header is not None
+    assert header["n_dropped"] == 4 and header["n_events"] == 4
+    snap = metrics.snapshot()
+    assert snap.get("trace_dropped_events") == 4
+    # idempotent: re-export does not double count
+    obs_export.write_jsonl(rec, path, metrics=metrics)
+    assert metrics.snapshot().get("trace_dropped_events") == 4
+    # events still load (header skipped)
+    assert len(obs_export.events_from_dicts(dicts)) == 4
+
+
+def test_critpath_cli_refuses_truncated(tmp_path, capsys):
+    path = str(tmp_path / "TRACE_t.jsonl")
+    obs_export.write_jsonl(_overflowed_recorder(), path)
+    assert critpath.main([path]) == 2
+    assert "dropped" in capsys.readouterr().err
+    assert critpath.main([path, "--allow-truncated"]) == 0
+
+
+def test_report_cli_refuses_truncated(tmp_path, capsys):
+    path = str(tmp_path / "TRACE_t.jsonl")
+    obs_export.write_jsonl(_overflowed_recorder(), path)
+    assert obs_report.main([path]) == 2
+    assert "dropped" in capsys.readouterr().err
+    assert obs_report.main([path, "--allow-truncated"]) == 0
+
+
+def test_critpath_cli_busy_gate(tmp_path, capsys):
+    # a fabricated METRICS file that disagrees with the trace fails the gate
+    g, shapes, _, _ = mlp_chain(n_layers=6, d=16, batch=4)
+    prof = g.annotate(shapes)
+    cluster = network.homogeneous_lan(n=4)
+    sch = schedule_opfence(g, prof, cluster)
+    rec = TraceRecorder()
+    sim = simulate_iteration(g, prof, sch, cluster, n_micro=4, trace=rec)
+    trace_path = str(tmp_path / "TRACE_s.jsonl")
+    obs_export.write_jsonl(rec, trace_path)
+    good = {"sim_device_busy_seconds": sum(sim.device_busy),
+            "sim_link_busy_seconds": sim.link_busy,
+            "sim_compress_busy_seconds": sim.compress_busy}
+    good_path = str(tmp_path / "METRICS_good.json")
+    with open(good_path, "w") as f:
+        json.dump(good, f)
+    assert critpath.main([trace_path, "--expect-busy", good_path]) == 0
+    bad = dict(good, sim_link_busy_seconds=good["sim_link_busy_seconds"] * 2)
+    bad_path = str(tmp_path / "METRICS_bad.json")
+    with open(bad_path, "w") as f:
+        json.dump(bad, f)
+    assert critpath.main([trace_path, "--expect-busy", bad_path]) == 1
